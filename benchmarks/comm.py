@@ -1,0 +1,38 @@
+"""Communication-volume accounting (the paper's 'Com. red.' column).
+
+Analytic bytes-per-outer-step for every algorithm, cross-checked against
+the dry-run's HLO collective parse for DSM (benchmarks/run.py prints both).
+"""
+
+from __future__ import annotations
+
+from repro.configs import load_arch
+from repro.configs import specs as S
+
+
+def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
+                         param_bytes: int = 2) -> dict:
+    """Inter-worker (slow-network) bytes per tau local steps, per the
+    all-reduce ~ 2x payload ring model.  Intra-worker TP traffic excluded
+    (that is the fast-network budget)."""
+    cfg = load_arch(arch_id).FULL
+    n = S.param_count(cfg)
+    payload = n * param_bytes
+    if algo in ("dsm", "slowmo", "signed_slowmo", "lookahead", "global_adamw",
+                "local_avg"):
+        wire = 2 * payload                      # one model all-reduce / outer step
+        rounds = 1
+    elif algo == "perstep":
+        wire = 2 * payload * tau                # gradient all-reduce every step
+        rounds = tau
+    elif algo == "mv_signsgd":
+        wire = payload // (8 * param_bytes) * 2  # 1-bit signs each way
+        rounds = 1
+    else:
+        raise ValueError(algo)
+    return {
+        "arch": arch_id, "algo": algo, "tau": tau,
+        "wire_bytes_per_outer": wire,
+        "comm_rounds_per_outer": rounds,
+        "reduction_vs_perstep": (2 * payload * tau) / max(wire, 1),
+    }

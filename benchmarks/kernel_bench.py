@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+wall-clock there is meaningless; we therefore report:
+  * us_per_call of the jnp (XLA-fused) reference path on CPU, and
+  * the DERIVED TPU roofline time: HBM-bound bytes / 819 GB/s — the number
+    the fused kernel is built to achieve (3 reads + 2 writes for DSM;
+    4 reads + 3 writes for AdamW).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_dsm_kernel(n=1_000_000):
+    key = jax.random.PRNGKey(0)
+    x0 = jax.random.normal(key, (n,), jnp.float32).astype(jnp.bfloat16)
+    m = jax.random.normal(key, (n,), jnp.float32)
+    xt = (x0.astype(jnp.float32) - 0.01).astype(jnp.bfloat16)
+    gamma = jnp.float32(0.01)
+    hp = dict(eta=1.0, beta1=0.95, beta2=0.98, lam=0.1)
+
+    jitted = jax.jit(lambda a, b, c: ref.dsm_update_ref(a, b, c, gamma, **hp))
+    us = _time(jitted, x0, m, xt)
+    # bytes: read x0(2) + m(4) + xt(2), write x(2) + m(4) per element
+    bytes_total = n * (2 + 4 + 2 + 2 + 4)
+    derived_tpu_us = bytes_total / HBM_BW * 1e6
+    return ("dsm_update_1M", us, f"tpu_roofline_us={derived_tpu_us:.1f}")
+
+
+def bench_adamw_kernel(n=1_000_000):
+    key = jax.random.PRNGKey(1)
+    p = jax.random.normal(key, (n,), jnp.float32).astype(jnp.bfloat16)
+    g = jax.random.normal(key, (n,), jnp.float32).astype(jnp.bfloat16)
+    m = jax.random.normal(key, (n,), jnp.float32)
+    v = jnp.abs(jax.random.normal(key, (n,), jnp.float32))
+    gamma, step = jnp.float32(1e-3), jnp.float32(3)
+
+    jitted = jax.jit(lambda a, b, c, d: ref.adamw_update_ref(
+        a, b, c, d, gamma, step, beta1=0.9, beta2=0.95, eps=1e-8, wd=0.1))
+    us = _time(jitted, p, g, m, v)
+    bytes_total = n * (2 + 2 + 4 + 4 + 2 + 4 + 4)
+    derived_tpu_us = bytes_total / HBM_BW * 1e6
+    return ("adamw_update_1M", us, f"tpu_roofline_us={derived_tpu_us:.1f}")
+
+
+def bench_interpret_correct(n=100_000):
+    """Pallas interpret path (correctness-representative, not perf)."""
+    from repro.kernels import ops
+
+    key = jax.random.PRNGKey(2)
+    x0 = jax.random.normal(key, (n,), jnp.float32)
+    m = jnp.zeros((n,), jnp.float32)
+    xt = x0 - 0.01
+    t0 = time.perf_counter()
+    ops.dsm_update_tree({"a": x0}, {"a": m}, {"a": xt}, jnp.float32(0.01),
+                        eta=1.0, beta1=0.95, beta2=0.98, lam=0.1)
+    us = (time.perf_counter() - t0) * 1e6
+    return ("dsm_pallas_interpret_100k", us, "correctness_mode")

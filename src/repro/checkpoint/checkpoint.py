@@ -1,0 +1,71 @@
+"""Pytree checkpointing (npz-based; orbax is not installed offline).
+
+Flattens any pytree with string-path keys; dtypes (incl. bf16) survive the
+round trip via a view-as-uint16 trick, since npz has no bf16 support.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+_BF16_TAG = "__bf16__"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for e in path:
+        k = getattr(e, "key", None)
+        if k is None:
+            k = getattr(e, "idx", None)
+        if k is None:
+            k = getattr(e, "name", str(e))
+        parts.append(str(k))
+    return "/".join(parts)
+
+
+def save(path: str, tree: PyTree, step: int = 0) -> None:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays, meta = {}, {"step": step, "keys": []}
+    for i, (p, leaf) in enumerate(flat):
+        key = f"a{i}"
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            arrays[key] = arr.view(np.uint16)
+            meta["keys"].append([_path_str(p), _BF16_TAG])
+        else:
+            arrays[key] = arr
+            meta["keys"].append([_path_str(p), str(arr.dtype)])
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like: PyTree) -> tuple[PyTree, int]:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    data = np.load(path + ".npz")
+    meta = json.load(open(path + ".json"))
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    flat_paths = [
+        _path_str(p) for p, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    saved = {k: i for i, (k, _) in enumerate(meta["keys"])}
+    out = []
+    for leaf, pstr in zip(flat, flat_paths):
+        if pstr not in saved:
+            raise KeyError(f"checkpoint missing leaf {pstr}")
+        i = saved[pstr]
+        arr = data[f"a{i}"]
+        if meta["keys"][i][1] == _BF16_TAG:
+            arr = arr.view(jnp.bfloat16)
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {pstr}: {arr.shape} vs {np.shape(leaf)}")
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), meta["step"]

@@ -1,0 +1,22 @@
+"""Architecture config: GPT-2 small (paper Table 1; peak LR 0.0005)
+Source: Radford et al. 2019 / paper Table 1
+"""
+
+from repro.configs.base import ModelConfig, TopologyConfig
+
+PEAK_LR = 0.0005
+
+FULL = ModelConfig(
+    name="gpt2_small", family="lm", n_layers=12, d_model=768, n_heads=12,
+    n_kv_heads=12, d_ff=3072, vocab_size=50257, head_dim=64,
+    pattern=("attn:dense",), mlp_gated=False, act="gelu", tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="gpt2_small_smoke", family="lm", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=512, vocab_size=1000, head_dim=32,
+    pattern=("attn:dense",), mlp_gated=False, act="gelu", tie_embeddings=True,
+    dtype="float32", param_dtype="float32",
+)
+
+TOPO = TopologyConfig(n_workers_single=8, n_workers_multi=16, grad_accum=1)

@@ -1,0 +1,23 @@
+"""Core: the paper's contribution (Algorithm 1 + base optimizers + baselines)."""
+
+from repro.core.base_opt import (
+    BaseOptimizer,
+    adamw,
+    get_base_optimizer,
+    lion,
+    momentum,
+    sgd,
+    sophia,
+)
+from repro.core.dsm import (
+    DSMConfig,
+    DSMState,
+    dsm_init,
+    global_sign_momentum_step,
+    make_dsm_step,
+    randomized_sign_pm,
+    randomized_sign_zero,
+    signed_lookahead_config,
+    signsgd_momentum_config,
+)
+from repro.core.schedules import constant, cosine_with_warmup, get_schedule

@@ -1,0 +1,227 @@
+"""Pure-JAX base optimizers with an optax-like gradient-transformation API.
+
+The paper's Algorithm 1 accepts *any* base optimizer for the local steps
+(SGD, momentum SGD, AdamW, Lion, Sophia, ...).  optax is not available in
+this environment, so we implement the transformations from scratch.
+
+API
+---
+Each optimizer is a :class:`BaseOptimizer` with
+
+    state = opt.init(params)
+    direction, state = opt.direction(grads, state, params, step[, aux])
+
+``direction`` returns the *update direction* ``d`` of the paper (eq. 4):
+the local model update is ``x <- x - gamma * d``.  Learning-rate schedules
+are applied OUTSIDE (by the local loop), matching the paper's convention of
+scaling ``(x_{t,0}-x_{t,tau})`` by ``1/gamma_t``.
+
+Note: decoupled weight decay of the base optimizer (AdamW's lambda) is
+folded into the direction (``d += wd * x``), which is exactly AdamW's
+``x <- x - eta*(m_hat/... + wd*x)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _tree_zeros_like(params: PyTree, dtype=None) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+@dataclasses.dataclass(frozen=True)
+class BaseOptimizer:
+    """A base optimizer: init + direction (paper's d_{t,k})."""
+
+    name: str
+    init: Callable[[PyTree], PyTree]
+    direction: Callable[..., tuple[PyTree, PyTree]]
+
+
+# ---------------------------------------------------------------------------
+# SGD family
+# ---------------------------------------------------------------------------
+
+def sgd() -> BaseOptimizer:
+    """Plain mini-batch SGD: d = g (paper eq. 5)."""
+
+    def init(params):
+        return ()
+
+    def direction(grads, state, params, step):
+        return grads, state
+
+    return BaseOptimizer("sgd", init, direction)
+
+
+def momentum(beta: float = 0.9, nesterov: bool = False) -> BaseOptimizer:
+    """Polyak momentum (paper Alg. 3): m <- beta*m + g, d = m (or Nesterov)."""
+
+    def init(params):
+        return _tree_zeros_like(params)
+
+    def direction(grads, state, params, step):
+        new_m = jax.tree.map(lambda m, g: beta * m + g, state, grads)
+        if nesterov:
+            d = jax.tree.map(lambda m, g: beta * m + g, new_m, grads)
+        else:
+            d = new_m
+        return d, new_m
+
+    return BaseOptimizer("momentum", init, direction)
+
+
+# ---------------------------------------------------------------------------
+# AdamW (paper Alg. 2) — the paper's main base optimizer
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    m: PyTree
+    v: PyTree
+
+
+def adamw(
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    moment_dtype=jnp.float32,
+) -> BaseOptimizer:
+    """AdamW with decoupled weight decay.
+
+    Defaults follow the paper's GPT-2 pre-training setup
+    (beta1=0.9, beta2=0.95, lambda=0.1 as in Liu et al. 2024b).
+    Moments are kept in float32 even under bf16 params (TPU practice).
+    """
+
+    def init(params):
+        return AdamWState(
+            m=_tree_zeros_like(params, moment_dtype),
+            v=_tree_zeros_like(params, moment_dtype),
+        )
+
+    def direction(grads, state, params, step):
+        count = step + 1  # 1-indexed for bias correction
+        bc1 = 1.0 - b1 ** count.astype(moment_dtype)
+        bc2 = 1.0 - b2 ** count.astype(moment_dtype)
+
+        new_m = jax.tree.map(
+            lambda m, g: b1 * m + (1.0 - b1) * g.astype(moment_dtype), state.m, grads
+        )
+        new_v = jax.tree.map(
+            lambda v, g: b2 * v + (1.0 - b2) * jnp.square(g.astype(moment_dtype)),
+            state.v,
+            grads,
+        )
+
+        def _dir(m, v, p):
+            d = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p.astype(moment_dtype)
+            return d.astype(p.dtype)
+
+        d = jax.tree.map(_dir, new_m, new_v, params)
+        return d, AdamWState(new_m, new_v)
+
+    return BaseOptimizer("adamw", init, direction)
+
+
+# ---------------------------------------------------------------------------
+# Lion (paper Alg. 4)
+# ---------------------------------------------------------------------------
+
+def lion(
+    b1: float = 0.95,
+    b2: float = 0.98,
+    weight_decay: float = 0.1,
+    moment_dtype=jnp.float32,
+) -> BaseOptimizer:
+    """Lion: d = sign(b1*m + (1-b1)*g) + wd*x ; m <- b2*m + (1-b2)*g."""
+
+    def init(params):
+        return _tree_zeros_like(params, moment_dtype)
+
+    def direction(grads, state, params, step):
+        def _dir(m, g, p):
+            u = b1 * m + (1.0 - b1) * g.astype(moment_dtype)
+            return (jnp.sign(u) + weight_decay * p.astype(moment_dtype)).astype(p.dtype)
+
+        d = jax.tree.map(_dir, state, grads, params)
+        new_m = jax.tree.map(
+            lambda m, g: b2 * m + (1.0 - b2) * g.astype(moment_dtype), state, grads
+        )
+        return d, new_m
+
+    return BaseOptimizer("lion", init, direction)
+
+
+# ---------------------------------------------------------------------------
+# Sophia (Liu et al. 2024b) — diagonal-Hessian clipped second-order method.
+# ---------------------------------------------------------------------------
+
+class SophiaState(NamedTuple):
+    m: PyTree
+    h: PyTree  # EMA of diagonal Hessian estimate
+
+
+def sophia(
+    b1: float = 0.96,
+    b2: float = 0.99,
+    rho: float = 0.04,
+    weight_decay: float = 0.1,
+    eps: float = 1e-12,
+    moment_dtype=jnp.float32,
+) -> BaseOptimizer:
+    """Sophia-G with Gauss-Newton-Bartlett style diag-Hessian proxy.
+
+    ``direction`` accepts an optional ``hess`` aux pytree (the GNB estimate,
+    typically grad**2 on a resampled batch).  When absent we fall back to
+    the squared gradient — the standard cheap proxy.
+    Update: d = clip(m / max(rho*h, eps), -1, 1) + wd*x.
+    """
+
+    def init(params):
+        return SophiaState(
+            m=_tree_zeros_like(params, moment_dtype),
+            h=_tree_zeros_like(params, moment_dtype),
+        )
+
+    def direction(grads, state, params, step, hess: Optional[PyTree] = None):
+        new_m = jax.tree.map(
+            lambda m, g: b1 * m + (1.0 - b1) * g.astype(moment_dtype), state.m, grads
+        )
+        hess_est = hess if hess is not None else jax.tree.map(
+            lambda g: jnp.square(g.astype(moment_dtype)), grads
+        )
+        new_h = jax.tree.map(
+            lambda h, e: b2 * h + (1.0 - b2) * e, state.h, hess_est
+        )
+
+        def _dir(m, h, p):
+            d = jnp.clip(m / jnp.maximum(rho * h, eps), -1.0, 1.0)
+            return (d + weight_decay * p.astype(moment_dtype)).astype(p.dtype)
+
+        d = jax.tree.map(_dir, new_m, new_h, params)
+        return d, SophiaState(new_m, new_h)
+
+    return BaseOptimizer("sophia", init, direction)
+
+
+REGISTRY: dict[str, Callable[..., BaseOptimizer]] = {
+    "sgd": sgd,
+    "momentum": momentum,
+    "adamw": adamw,
+    "lion": lion,
+    "sophia": sophia,
+}
+
+
+def get_base_optimizer(name: str, **kwargs) -> BaseOptimizer:
+    if name not in REGISTRY:
+        raise ValueError(f"unknown base optimizer {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name](**kwargs)

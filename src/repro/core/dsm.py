@@ -1,0 +1,297 @@
+"""Distributed Sign Momentum with local steps — the paper's Algorithm 1.
+
+Structure (one *outer* step t):
+
+  1. every worker i runs tau local steps of a base optimizer:
+         x^{(i)}_{t,k+1} = x^{(i)}_{t,k} - gamma_t * d^{(i)}_{t,k}
+  2. ONE all-reduce:  x_{t,tau} = mean_i x^{(i)}_{t,tau}
+  3. global Lion-style sign-momentum step on the pseudo-gradient
+     Delta_t = (x_{t,0} - x_{t,tau}) / gamma_t :
+         u_{t+1}   = beta1 * m_t + (1-beta1) * Delta_t          (eq. 6)
+         x_{t+1,0} = x_{t,0} - eta*gamma_t*(sign(u_{t+1}) + lam*x_{t,0})  (eq. 7)
+         m_{t+1}   = beta2 * m_t + (1-beta2) * Delta_t          (eq. 8)
+  4. broadcast x_{t+1,0} back to all workers.
+
+Workers are represented by a leading axis ``W`` on params / optimizer state /
+batches.  Under the production mesh this axis is sharded over the
+``("pod","data")`` axes, so step 1 emits **no inter-worker collectives**
+(everything is elementwise in W) and step 2 lowers to a single all-reduce
+over (pod, data) — the tau-amortized communication the paper is about.
+
+Instances (paper §2 "Algorithm instances"):
+  * tau=1, beta1=beta2=beta, lam=0    -> signSGD with momentum (eq. 3)
+  * n=1 (W=1)                         -> signed Lookahead (+ decoupled wd)
+
+The randomized sign operators of §3.1 (eqs. 9/10) used by the theory are
+provided for validation; training uses the real sign.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.base_opt import BaseOptimizer
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Sign operators
+# ---------------------------------------------------------------------------
+
+def sign(u: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sign(u)
+
+
+def randomized_sign_pm(u: jnp.ndarray, key: jax.Array, bound: float) -> jnp.ndarray:
+    """Eq. (9): +-sign(v_j), P[sign(v_j)] = 1/2 + |v_j|/(2B).  E[.] = v/B."""
+    p_keep = 0.5 + jnp.abs(u) / (2.0 * bound)
+    flip = jax.random.uniform(key, u.shape, dtype=u.dtype) < p_keep
+    return jnp.where(flip, jnp.sign(u), -jnp.sign(u))
+
+
+def randomized_sign_zero(u: jnp.ndarray, key: jax.Array, bound: float) -> jnp.ndarray:
+    """Eq. (10): sign(v_j) w.p. |v_j|/B else 0.  E[.] = v/B."""
+    keep = jax.random.uniform(key, u.shape, dtype=u.dtype) < jnp.abs(u) / bound
+    return jnp.where(keep, jnp.sign(u), jnp.zeros_like(u))
+
+
+SIGN_MODES = ("sign", "rand_pm", "rand_zero")
+
+
+# ---------------------------------------------------------------------------
+# Config / state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DSMConfig:
+    """Hyper-parameters of Algorithm 1.
+
+    Defaults are the paper's recommended Lion parameters for the global step
+    (beta1=0.95, beta2=0.98, lambda=0.1; §4 Implementations).
+    """
+
+    tau: int = 12                 # communication interval (local steps)
+    global_lr: float = 1.0        # eta
+    beta1: float = 0.95           # u_{t+1} interpolation (eq. 6)
+    beta2: float = 0.98           # m_{t+1} interpolation (eq. 8)
+    weight_decay: float = 0.1     # decoupled lambda (eq. 7)
+    sign_mode: str = "sign"       # "sign" | "rand_pm" | "rand_zero"
+    sign_bound: float = 1.0       # B for randomized sign (theory uses tau*R)
+    zero_sharded: bool = False    # beyond-paper: ZeRO-style sharded global step
+    use_kernel: bool = False      # fused Pallas kernel for the global step
+
+    def __post_init__(self):
+        if self.sign_mode not in SIGN_MODES:
+            raise ValueError(f"sign_mode must be one of {SIGN_MODES}")
+        if not (0.0 <= self.beta1 <= 1.0 and 0.0 <= self.beta2 <= 1.0):
+            raise ValueError("momentum coefficients must lie in [0, 1]")
+        if self.tau < 1:
+            raise ValueError("tau must be >= 1")
+
+
+class DSMState(NamedTuple):
+    params: PyTree       # per-worker params, leaves (W, *shape)
+    x0: PyTree           # global model buffer x_{t,0}, leaves (*shape)
+    m: PyTree            # global sign momentum m_t, leaves (*shape)
+    base_state: PyTree   # per-worker base-opt state, leaves (W, ...)
+    t: jnp.ndarray       # outer step counter
+    inner: jnp.ndarray   # total local-step counter (base-opt bias correction)
+
+
+def _broadcast_workers(x0: PyTree, n_workers: int) -> PyTree:
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_workers,) + x.shape), x0
+    )
+
+
+def dsm_init(
+    params: PyTree,
+    base_opt: BaseOptimizer,
+    n_workers: int,
+    momentum_dtype=jnp.float32,
+) -> DSMState:
+    """Initialize Algorithm 1 state from a single (global) param pytree."""
+    worker_params = _broadcast_workers(params, n_workers)
+    base_state = jax.vmap(base_opt.init)(worker_params)
+    return DSMState(
+        params=worker_params,
+        x0=params,
+        m=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=momentum_dtype), params),
+        base_state=base_state,
+        t=jnp.zeros((), jnp.int32),
+        inner=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Global sign-momentum step (eqs. 6-8), jnp reference path.
+# The fused Pallas kernel in repro.kernels.dsm_update implements the same
+# math in one HBM pass; see kernels/ref.py for the oracle == this function.
+# ---------------------------------------------------------------------------
+
+def global_sign_momentum_step(
+    x0: PyTree,
+    m: PyTree,
+    x_tau_mean: PyTree,
+    gamma: jnp.ndarray,
+    cfg: DSMConfig,
+    rng: Optional[jax.Array] = None,
+) -> tuple[PyTree, PyTree]:
+    """Apply eqs. (6)-(8) leafwise; returns (x_{t+1,0}, m_{t+1})."""
+    if cfg.use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.dsm_update_tree(
+            x0, m, x_tau_mean, gamma,
+            eta=cfg.global_lr, beta1=cfg.beta1, beta2=cfg.beta2,
+            lam=cfg.weight_decay,
+        )
+
+    leaves, treedef = jax.tree.flatten(x0)
+    if cfg.sign_mode == "sign":
+        keys = [None] * len(leaves)
+    else:
+        keys = list(jax.random.split(rng, len(leaves)))
+
+    new_x, new_m = [], []
+    for leaf_x0, leaf_m, leaf_xt, key in zip(
+        leaves, jax.tree.leaves(m), jax.tree.leaves(x_tau_mean), keys
+    ):
+        # compute dtype follows the momentum buffer (f32 default; bf16 opt-in
+        # for very large models where f32 temporaries would not fit HBM)
+        cdt = leaf_m.dtype
+        g = gamma.astype(cdt) if hasattr(gamma, "astype") else jnp.asarray(gamma, cdt)
+        delta = (leaf_x0.astype(cdt) - leaf_xt.astype(cdt)) / g
+        u = jnp.asarray(cfg.beta1, cdt) * leaf_m + jnp.asarray(1.0 - cfg.beta1, cdt) * delta
+        if cfg.sign_mode == "sign":
+            s = jnp.sign(u)
+        elif cfg.sign_mode == "rand_pm":
+            s = randomized_sign_pm(u, key, cfg.sign_bound)
+        else:
+            s = randomized_sign_zero(u, key, cfg.sign_bound)
+        x_new = leaf_x0.astype(cdt) - jnp.asarray(cfg.global_lr, cdt) * g * (
+            s + jnp.asarray(cfg.weight_decay, cdt) * leaf_x0.astype(cdt)
+        )
+        m_new = jnp.asarray(cfg.beta2, cdt) * leaf_m + jnp.asarray(1.0 - cfg.beta2, cdt) * delta
+        new_x.append(x_new.astype(leaf_x0.dtype))
+        new_m.append(m_new.astype(leaf_m.dtype))
+
+    return jax.tree.unflatten(treedef, new_x), jax.tree.unflatten(treedef, new_m)
+
+
+# ---------------------------------------------------------------------------
+# Outer-step factory
+# ---------------------------------------------------------------------------
+
+def make_dsm_step(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    base_opt: BaseOptimizer,
+    cfg: DSMConfig,
+    schedule: Callable[[jnp.ndarray], jnp.ndarray],
+):
+    """Build ``outer_step(state, batch[, rng]) -> (state, metrics)``.
+
+    ``batch`` must have leaves shaped ``(W, tau, accum, B_micro, ...)``:
+    worker axis first, one microbatch-group per local step, ``accum``
+    gradient-accumulation microbatches inside each local step.
+    ``loss_fn(params, microbatch)`` consumes single-worker params and one
+    ``(B_micro, ...)`` microbatch.
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def local_phase(params_w, base_state_w, batch, gamma, inner0):
+        """tau local steps, vmapped over the worker axis. No (pod,data) comms."""
+
+        def one_local_step(carry, microbatch):
+            params, base_state, k = carry
+
+            def per_worker(p, bs, mb):
+                # mb leaves: (accum, B_micro, ...) -> accumulate grads
+                def acc_step(carry, mbi):
+                    g_sum, loss_sum = carry
+                    loss, g = grad_fn(p, mbi)
+                    return (
+                        jax.tree.map(jnp.add, g_sum, g),
+                        loss_sum + loss,
+                    ), None
+
+                acc = jax.tree.leaves(mb)[0].shape[0]
+                g0 = jax.tree.map(lambda x: jnp.zeros_like(x), p)
+                (g_sum, loss_sum), _ = jax.lax.scan(
+                    acc_step, (g0, jnp.zeros((), jnp.float32)), mb
+                )
+                grads = jax.tree.map(lambda g: g / acc, g_sum)
+                loss = loss_sum / acc
+                d, new_bs = base_opt.direction(grads, bs, p, inner0 + k)
+                new_p = jax.tree.map(
+                    lambda x, dd: (
+                        x.astype(jnp.float32) - gamma * dd.astype(jnp.float32)
+                    ).astype(x.dtype),
+                    p, d,
+                )
+                return new_p, new_bs, loss
+
+            new_params, new_base, losses = jax.vmap(per_worker)(
+                params, base_state, microbatch
+            )
+            return (new_params, new_base, k + 1), losses.mean()
+
+        # scan over the tau microbatches: batch leaves (W, tau, ...) -> (tau, W, ...)
+        mb_scan = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)
+        (params_w, base_state_w, _), losses = jax.lax.scan(
+            one_local_step, (params_w, base_state_w, jnp.zeros((), jnp.int32)), mb_scan
+        )
+        return params_w, base_state_w, losses
+
+    def outer_step(state: DSMState, batch, rng: Optional[jax.Array] = None):
+        gamma = schedule(state.t)
+
+        params_w, base_state_w, losses = local_phase(
+            state.params, state.base_state, batch, gamma, state.inner
+        )
+
+        # --- line 7: THE all-reduce over workers (once per tau local steps) ---
+        x_tau_mean = jax.tree.map(lambda p: p.mean(axis=0), params_w)
+
+        # --- lines 8-10: global sign momentum ---
+        new_x0, new_m = global_sign_momentum_step(
+            state.x0, state.m, x_tau_mean, gamma, cfg, rng
+        )
+
+        # --- line 11: synchronize workers ---
+        n_workers = jax.tree.leaves(state.params)[0].shape[0]
+        new_params = _broadcast_workers(new_x0, n_workers)
+
+        new_state = DSMState(
+            params=new_params,
+            x0=new_x0,
+            m=new_m,
+            base_state=base_state_w,
+            t=state.t + 1,
+            inner=state.inner + cfg.tau,
+        )
+        metrics = {"loss": losses.mean(), "gamma": gamma, "last_loss": losses[-1]}
+        return new_state, metrics
+
+    return outer_step
+
+
+# ---------------------------------------------------------------------------
+# Convenience instances
+# ---------------------------------------------------------------------------
+
+def signsgd_momentum_config(beta: float) -> DSMConfig:
+    """tau=1, beta1=beta2=beta, lam=0: exactly eq. (3) signSGD w/ momentum."""
+    return DSMConfig(tau=1, beta1=beta, beta2=beta, weight_decay=0.0)
+
+
+def signed_lookahead_config(tau: int, beta: float, weight_decay: float = 0.0) -> DSMConfig:
+    """n=1 instance (§4.1 ablation): signed Lookahead with decoupled wd."""
+    return DSMConfig(tau=tau, beta1=beta, beta2=beta, weight_decay=weight_decay)

@@ -1,0 +1,44 @@
+"""Learning-rate schedules (paper §4: cosine with 2k warmup, 0.05x floor)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(peak_lr: float):
+    def sched(step):
+        return jnp.asarray(peak_lr, dtype=jnp.float32)
+
+    return sched
+
+
+def cosine_with_warmup(
+    peak_lr: float,
+    total_steps: int,
+    warmup_steps: int = 2000,
+    final_frac: float = 0.05,
+):
+    """Linear warmup to ``peak_lr`` then cosine decay to ``final_frac * peak_lr``.
+
+    Matches the paper's setup: 2k-step warmup, final LR = 0.05 x peak LR.
+    """
+    min_lr = final_frac * peak_lr
+
+    def sched(step):
+        step = jnp.asarray(step, dtype=jnp.float32)
+        warm = peak_lr * (step + 1.0) / max(warmup_steps, 1)
+        progress = jnp.clip(
+            (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_lr + 0.5 * (peak_lr - min_lr) * (1.0 + jnp.cos(jnp.pi * progress))
+        return jnp.where(step < warmup_steps, warm, cos).astype(jnp.float32)
+
+    return sched
+
+
+def get_schedule(name: str, peak_lr: float, total_steps: int = 10000, **kw):
+    if name == "constant":
+        return constant(peak_lr)
+    if name == "cosine":
+        return cosine_with_warmup(peak_lr, total_steps, **kw)
+    raise ValueError(f"unknown schedule {name!r}")

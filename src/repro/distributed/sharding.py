@@ -1,0 +1,199 @@
+"""Sharding rules: map parameter / batch / cache pytrees onto the mesh.
+
+Training mesh axes: ``("worker", "zero", "model")``
+  worker — the paper's n workers (local-step isolation; pod*data rows)
+  zero   — FSDP/ZeRO shard *within* a worker (paper §2: "ZeRO-2 for local
+           steps ... faster intra-node communication")
+  model  — tensor parallel within a worker
+
+Serving mesh axes: ``("data", "model")``.
+
+Rules are name-aware (Megatron-style column/row parallel) with a generic
+divisibility fallback; dims that don't divide are replicated.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# leaf-name -> which dim (from the end, ignoring stacked prefixes) is the
+# model-parallel one. "col": last dim; "row": second-to-last dim.
+_COL = ("wq", "wk", "wv", "w1", "w3", "in_proj", "in_x", "in_gate",
+        "w_a", "w_x", "lm_head", "patch_proj", "we1", "we3")
+_ROW = ("wo", "w2", "out_proj", "out", "we2")
+
+
+def _model_dim(name: str, shape: tuple, i0: int, model: int) -> Optional[int]:
+    nd = len(shape)
+    if nd - i0 < 1:
+        return None
+    cands = []
+    if name == "embed":
+        # vocab-parallel: logits shard over V (logsumexp psum is tiny);
+        # the lookup becomes masked-gather + small psum of (B,S,d).
+        cands = [i0, nd - 1]
+    elif name in _COL:
+        cands = [nd - 1, nd - 2]
+    elif name in _ROW:
+        cands = [nd - 2, nd - 1]
+    else:
+        cands = [nd - 1, nd - 2]
+    for c in cands:
+        if c >= i0 and shape[c] % model == 0 and shape[c] >= model:
+            return c
+    return None
+
+
+def _pick_dim(shape: tuple, i0: int, size: int, taken: set) -> Optional[int]:
+    """Largest eligible dim divisible by ``size``."""
+    best = None
+    for i in range(i0, len(shape)):
+        if i in taken or shape[i] % size != 0 or shape[i] < size:
+            continue
+        if best is None or shape[i] > shape[best]:
+            best = i
+    return best
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def param_pspecs(
+    abstract_params: PyTree,
+    *,
+    model: int,
+    zero: int = 1,
+    worker_axis: bool = False,
+    zero_axes=("zero",),
+    model_axis: str = "model",
+    replicate_names: tuple = (),
+) -> PyTree:
+    """PartitionSpecs for a parameter pytree.
+
+    ``worker_axis``: leaves carry a leading per-worker dim -> "worker".
+    ``zero_axes``: mesh axes for the FSDP dim (e.g. ("zero",) or
+    ("worker","zero") for fully-sharded global buffers).
+    """
+    zero_total = zero
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        name = _leaf_name(path)
+        spec = [None] * len(shape)
+        i0 = 0
+        if worker_axis:
+            if len(shape) == 0:
+                return P()
+            spec[0] = "worker"
+            i0 = 1
+        # stacked-layer dim (scan) right after worker dim: leave unsharded
+        path_str = "/".join(str(getattr(e, "key", e)) for e in path)
+        if "blocks" in path_str and len(shape) > i0:
+            i0 += 1
+        taken = set()
+        md = (
+            _model_dim(name, shape, i0, model)
+            if model > 1 and name not in replicate_names else None
+        )
+        if md is not None:
+            spec[md] = model_axis
+            taken.add(md)
+        if zero_total > 1:
+            zd = _pick_dim(shape, i0, zero_total, taken)
+            if zd is not None:
+                spec[zd] = zero_axes if len(zero_axes) > 1 else zero_axes[0]
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+def train_batch_pspecs(batch: PyTree, zero: int = 1, model: int = 1) -> PyTree:
+    """Batch leaves (W, tau, accum, B_micro, ...): worker on W, zero on B.
+
+    Float leaves (stub frame/patch embeddings) also shard their trailing
+    feature dim over model — they are the dominant input bytes for
+    audio/VLM archs.
+    """
+
+    def spec_for(leaf):
+        spec = [None] * len(leaf.shape)
+        spec[0] = "worker"
+        if (len(leaf.shape) > 3 and zero > 1
+                and leaf.shape[3] % zero == 0 and leaf.shape[3] >= zero):
+            spec[3] = "zero"
+        if (model > 1 and len(leaf.shape) > 4
+                and jnp.issubdtype(leaf.dtype, jnp.floating)
+                and leaf.shape[-1] % model == 0 and leaf.shape[-1] >= model):
+            spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree.map(spec_for, batch)
+
+
+def serve_batch_pspecs(batch: PyTree, data: int, model: int) -> PyTree:
+    """Prefill batch (B, S, ...): B over data (fallback: S)."""
+
+    def spec_for(leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if len(shape) >= 1 and shape[0] % data == 0 and shape[0] >= data:
+            spec[0] = "data"
+        elif len(shape) >= 2 and shape[1] % data == 0:
+            spec[1] = "data"
+        return P(*spec)
+
+    return jax.tree.map(spec_for, batch)
+
+
+def cache_pspecs(cache: PyTree, data: int, model: int, stacked_hint: bool = True) -> PyTree:
+    """KV/state cache sharding: batch dim over data (fallback: seq), last
+    divisible dim over model."""
+
+    def spec_for(path, leaf):
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        path_str = "/".join(str(getattr(e, "key", e)) for e in path)
+        i0 = 1 if ("blocks" in path_str and len(shape) > 1) else 0
+        taken = set()
+        # data axis: prefer batch dim (i0), else next dims
+        dd = None
+        for i in range(i0, len(shape)):
+            if shape[i] % data == 0 and shape[i] >= data:
+                dd = i
+                break
+        if dd is not None and data > 1:
+            spec[dd] = "data"
+            taken.add(dd)
+        # model axis: last divisible dim
+        if model > 1:
+            for i in range(len(shape) - 1, i0 - 1, -1):
+                if i not in taken and shape[i] % model == 0 and shape[i] >= model:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def to_named(pspecs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def replicated(tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,66 @@
+"""Fused Pallas TPU kernel for the DSM global sign-momentum step (eqs. 6-8).
+
+Why a kernel: the global step is elementwise over EVERY parameter and
+strictly memory-bound (roofline: ~0 FLOP/byte).  Unfused, XLA materializes
+delta / u / sign as separate HBM round-trips; the fused kernel streams
+x0, m, x_tau through VMEM once and writes x_new, m_new — 3 reads + 2
+writes, the HBM-traffic lower bound for this update.
+
+TPU mapping: flat parameter slabs are reshaped to (rows, 128) (lane-aligned)
+and tiled (BLOCK_ROWS, 128) into VMEM — 5 live tiles = ~1.3 MB VMEM, well
+under the ~16 MB/core budget, letting the DMA pipeline hide latency.
+gamma arrives as a (1, 1) tile (it changes every step under a LR schedule;
+hyper-parameters are compile-time constants).
+
+Validated on CPU with interpret=True against ref.dsm_update_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 512  # (512, 128) f32 tile = 256 KiB; 5 tiles live = 1.25 MiB VMEM
+
+
+def _dsm_kernel(gamma_ref, x0_ref, m_ref, xt_ref, x_out_ref, m_out_ref,
+                *, eta, beta1, beta2, lam):
+    g = gamma_ref[0, 0]
+    x0 = x0_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    xt = xt_ref[...].astype(jnp.float32)
+    delta = (x0 - xt) / g
+    u = beta1 * m + (1.0 - beta1) * delta
+    x_new = x0 - eta * g * (jnp.sign(u) + lam * x0)
+    m_new = beta2 * m + (1.0 - beta2) * delta
+    x_out_ref[...] = x_new.astype(x_out_ref.dtype)
+    m_out_ref[...] = m_new.astype(m_out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eta", "beta1", "beta2", "lam", "interpret")
+)
+def dsm_update_2d(x0, m, xt, gamma, *, eta, beta1, beta2, lam, interpret=False):
+    """x0/m/xt: (rows, 128). Returns (x_new, m_new)."""
+    rows = x0.shape[0]
+    br = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, br),)
+    gamma_arr = jnp.reshape(gamma.astype(jnp.float32), (1, 1))
+
+    tile = pl.BlockSpec((br, LANES), lambda i: (i, 0))
+    scalar = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_dsm_kernel, eta=eta, beta1=beta1, beta2=beta2, lam=lam),
+        grid=grid,
+        in_specs=[scalar, tile, tile, tile],
+        out_specs=[tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct(x0.shape, x0.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+        ],
+        interpret=interpret,
+    )(gamma_arr, x0, m, xt)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose targets).
+
+These mirror, bit-for-bit in f32 math, what the fused kernels compute:
+  * dsm_update  — the paper's global sign-momentum step (eqs. 6-8)
+  * adamw_update — one fused AdamW local step (Alg. 2)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def dsm_update_ref(x0, m, x_tau, gamma, *, eta, beta1, beta2, lam):
+    """Returns (x_new, m_new). Shapes alike; x dtype preserved, m stays f32."""
+    x0f = x0.astype(F32)
+    mf = m.astype(F32)
+    delta = (x0f - x_tau.astype(F32)) / gamma
+    u = beta1 * mf + (1.0 - beta1) * delta
+    x_new = x0f - eta * gamma * (jnp.sign(u) + lam * x0f)
+    m_new = beta2 * mf + (1.0 - beta2) * delta
+    return x_new.astype(x0.dtype), m_new.astype(m.dtype)
+
+
+def adamw_update_ref(p, g, m, v, gamma, step, *, beta1, beta2, eps, wd):
+    """One AdamW step. step is 0-indexed; bias correction uses step+1."""
+    pf, gf = p.astype(F32), g.astype(F32)
+    m_new = beta1 * m.astype(F32) + (1.0 - beta1) * gf
+    v_new = beta2 * v.astype(F32) + (1.0 - beta2) * gf * gf
+    c = (step + 1.0).astype(F32)
+    mhat = m_new / (1.0 - beta1 ** c)
+    vhat = v_new / (1.0 - beta2 ** c)
+    p_new = pf - gamma * (mhat / (jnp.sqrt(vhat) + eps) + wd * pf)
+    return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)

@@ -1,0 +1,340 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, with NO real allocation
+(ShapeDtypeStruct inputs, AOT lower/compile only).
+
+MUST set the device-count flag before any other import (jax locks device
+count on first init).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ARCH_IDS, arch_supports_shape, load_arch
+from repro.configs import specs as S
+from repro.core import DSMConfig, constant, dsm_init, get_base_optimizer, make_dsm_step
+from repro.core.dsm import DSMState
+from repro.distributed import sharding as shd
+from repro.launch.mesh import (
+    MODEL_PAR,
+    make_production_mesh,
+    mesh_dims,
+    serving_mesh,
+    training_mesh,
+)
+from repro.models import transformer as T
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e) for the roofline terms
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_COLLECTIVE_RE = re.compile(
+    r"=(.*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result sizes per collective kind from (partitioned) HLO text.
+
+    all-reduce moves ~2x its payload on a ring (RS + AG); the others ~1x.
+    """
+    out = {k: 0 for k in
+           ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+            "collective-permute")}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        # group(1) = the (possibly tuple) result type, incl. /*index*/ comments
+        out[m.group(2).lower()] += _shape_bytes(m.group(1))
+    out["wire_bytes"] = (
+        2 * out["all-reduce"] + out["all-gather"] + out["reduce-scatter"]
+        + out["all-to-all"] + out["collective-permute"]
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Lowering builders
+# ---------------------------------------------------------------------------
+
+ATTN_NAMES = ("wq", "wk", "wv", "wo")
+
+
+def _state_shardings(state_sds: DSMState, mesh, zero: int, zero_global_buffers: bool,
+                     replicate_names: tuple = ()):
+    """Sharding tree for DSMState."""
+    n2 = partial(shd.to_named, mesh=mesh)
+    wspec = shd.param_pspecs(state_sds.params, model=MODEL_PAR, zero=zero,
+                             worker_axis=True, replicate_names=replicate_names)
+    gzero_axes = ("worker", "zero") if zero_global_buffers else ("zero",)
+    n_workers = mesh.devices.shape[0]
+    gzero = zero * (n_workers if zero_global_buffers else 1)
+    gspec = shd.param_pspecs(state_sds.x0, model=MODEL_PAR, zero=gzero,
+                             zero_axes=gzero_axes, replicate_names=replicate_names)
+    mspec = shd.param_pspecs(state_sds.m, model=MODEL_PAR, zero=gzero,
+                             zero_axes=gzero_axes, replicate_names=replicate_names)
+    bspec = shd.param_pspecs(state_sds.base_state, model=MODEL_PAR, zero=zero,
+                             worker_axis=True, replicate_names=replicate_names)
+    return DSMState(
+        params=n2(wspec), x0=n2(gspec), m=n2(mspec), base_state=n2(bspec),
+        t=NamedSharding(mesh, P()), inner=NamedSharding(mesh, P()),
+    )
+
+
+def build_train(arch_id: str, shape_name: str, multi_pod: bool,
+                zero_global_buffers: bool = True, tau: int = None,
+                base_mesh=None):
+    mod = load_arch(arch_id)
+    cfg, topo = mod.FULL, mod.TOPO
+    shape = INPUT_SHAPES[shape_name]
+    base = base_mesh if base_mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    W = topo.n_workers_multi if multi_pod else topo.n_workers_single
+    mesh = training_mesh(base, W)
+    zero = mesh.devices.shape[1]
+
+    base_opt = get_base_optimizer(topo.base_opt)
+    dsm_cfg = DSMConfig(tau=tau or topo.tau)
+    sched = constant(3e-4)
+    loss = lambda p, b: T.loss_fn(
+        p, b, cfg, remat=topo.remat,
+        remat_policy=getattr(topo, "remat_policy", "full"))
+    step = make_dsm_step(loss, base_opt, dsm_cfg, sched)
+
+    aps = S.abstract_params(cfg)
+    mdt = jnp.dtype(topo.momentum_dtype)
+    state_sds = jax.eval_shape(lambda p: dsm_init(p, base_opt, W, momentum_dtype=mdt), aps)
+    batch_sds = S.train_batch_specs(cfg, topo, shape, W)
+
+    rep = () if topo.attn_tp else ATTN_NAMES
+    state_sh = _state_shardings(state_sds, mesh, zero, zero_global_buffers, rep)
+    batch_sh = shd.to_named(shd.train_batch_pspecs(batch_sds, zero, MODEL_PAR), mesh)
+    metrics_sh = {
+        "loss": NamedSharding(mesh, P()),
+        "gamma": NamedSharding(mesh, P()),
+        "last_loss": NamedSharding(mesh, P()),
+    }
+
+    with mesh:
+        lowered = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, metrics_sh),
+            donate_argnums=(0,),   # reuse state buffers (params/m/x0/moments)
+        ).lower(state_sds, batch_sds)
+    return lowered, mesh
+
+
+def build_prefill(arch_id: str, shape_name: str, multi_pod: bool, base_mesh=None,
+                  unroll: bool = False):
+    mod = load_arch(arch_id)
+    cfg = mod.FULL
+    shape = INPUT_SHAPES[shape_name]
+    base = base_mesh if base_mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    mesh = serving_mesh(base)
+    data = mesh.devices.shape[0]
+
+    aps = S.abstract_params(cfg)
+    batch_sds = S.prefill_batch_specs(cfg, shape)
+
+    pspec = shd.param_pspecs(aps, model=MODEL_PAR, zero=data, zero_axes=("data",))
+    params_sh = shd.to_named(pspec, mesh)
+    batch_sh = shd.to_named(
+        shd.serve_batch_pspecs(batch_sds, data, MODEL_PAR), mesh)
+
+    fn = lambda p, b: T.prefill(p, b, cfg, remat=True, unroll=unroll)
+    out_sds = jax.eval_shape(fn, aps, batch_sds)
+    logits_sh = NamedSharding(mesh, P("data", "model"))
+    cache_sh = shd.to_named(
+        shd.cache_pspecs(out_sds[1], data, MODEL_PAR), mesh)
+
+    with mesh:
+        lowered = jax.jit(
+            fn, in_shardings=(params_sh, batch_sh),
+            out_shardings=(logits_sh, cache_sh),
+        ).lower(aps, batch_sds)
+    return lowered, mesh
+
+
+def build_decode(arch_id: str, shape_name: str, multi_pod: bool, base_mesh=None,
+                 unroll: bool = False):
+    mod = load_arch(arch_id)
+    cfg = mod.FULL
+    shape = INPUT_SHAPES[shape_name]
+    base = base_mesh if base_mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    mesh = serving_mesh(base)
+    data = mesh.devices.shape[0]
+
+    aps = S.abstract_params(cfg)
+    dspecs = S.decode_specs(cfg, shape)
+
+    pspec = shd.param_pspecs(aps, model=MODEL_PAR, zero=data, zero_axes=("data",))
+    params_sh = shd.to_named(pspec, mesh)
+    cache_sh = shd.to_named(shd.cache_pspecs(dspecs["cache"], data, MODEL_PAR), mesh)
+    tok_sh = NamedSharding(
+        mesh, P("data") if shape.global_batch % data == 0 and shape.global_batch >= data else P())
+    pos_sh = NamedSharding(mesh, P())
+    B = shape.global_batch
+    logits_sh = NamedSharding(
+        mesh, P("data", "model") if B % data == 0 and B >= data else P(None, "model"))
+
+    fn = lambda p, c, t, pos: T.decode_step(p, c, t, pos, cfg, unroll=unroll)
+    with mesh:
+        lowered = jax.jit(
+            fn,
+            in_shardings=(params_sh, cache_sh, tok_sh, pos_sh),
+            out_shardings=(logits_sh, cache_sh),
+        ).lower(aps, dspecs["cache"], dspecs["tokens"], dspecs["pos"])
+    return lowered, mesh
+
+
+def build(arch_id: str, shape_name: str, multi_pod: bool, **kw):
+    kind = INPUT_SHAPES[shape_name].kind
+    if kind == "train":
+        return build_train(arch_id, shape_name, multi_pod, **kw)
+    if kind == "prefill":
+        return build_prefill(arch_id, shape_name, multi_pod, **kw)
+    return build_decode(arch_id, shape_name, multi_pod, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms from the compiled artifact
+# ---------------------------------------------------------------------------
+
+def analyze(lowered, compiled, n_chips: int) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    mem = compiled.memory_analysis()
+    mem_d = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+    }
+    # cost_analysis flops/bytes are per-device for an SPMD-partitioned module
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll["wire_bytes"] / ICI_BW
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory), ("collective", t_coll)],
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "collectives": coll,
+        "memory": mem_d,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "n_chips": n_chips,
+    }
+
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool, outdir: str, **kw) -> dict:
+    tag = f"{arch_id}.{shape_name}.{'multipod' if multi_pod else 'singlepod'}"
+    t0 = time.time()
+    try:
+        lowered, mesh = build(arch_id, shape_name, multi_pod, **kw)
+        compiled = lowered.compile()
+        rec = analyze(lowered, compiled, mesh.devices.size)
+        rec.update(status="ok", arch=arch_id, shape=shape_name,
+                   multi_pod=multi_pod, mesh=mesh_dims(mesh),
+                   compile_s=round(time.time() - t0, 1))
+    except Exception as e:  # noqa: BLE001 — record failures, they are bugs
+        rec = {
+            "status": "error", "arch": arch_id, "shape": shape_name,
+            "multi_pod": multi_pod, "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+            "compile_s": round(time.time() - t0, 1),
+        }
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        with open(os.path.join(outdir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--no-zero-global-buffers", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    for arch_id in archs:
+        mod = load_arch(arch_id)
+        for shape_name in shapes:
+            if not arch_supports_shape(mod.FULL, mod.TOPO, shape_name):
+                print(f"SKIP {arch_id} x {shape_name} (DESIGN.md: sub-quadratic only)")
+                continue
+            for mp in meshes:
+                kw = {}
+                if INPUT_SHAPES[shape_name].kind == "train" and args.no_zero_global_buffers:
+                    kw["zero_global_buffers"] = False
+                rec = run_one(arch_id, shape_name, mp, args.outdir, **kw)
+                mark = "OK " if rec["status"] == "ok" else "ERR"
+                extra = (
+                    f"dom={rec.get('dominant')} "
+                    f"tc={rec.get('t_compute_s', 0):.3e} tm={rec.get('t_memory_s', 0):.3e} "
+                    f"tn={rec.get('t_collective_s', 0):.3e} "
+                    f"peakGB={rec.get('memory', {}).get('peak_bytes', 0)/1e9:.2f}"
+                    if rec["status"] == "ok" else rec.get("error", "")[:200]
+                )
+                print(f"{mark} {arch_id:28s} {shape_name:12s} "
+                      f"{'multi' if mp else 'single'} ({rec['compile_s']}s) {extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

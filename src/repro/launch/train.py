@@ -1,0 +1,112 @@
+"""Training launcher.
+
+Two modes:
+  * local (default)   — really trains on the available devices (CPU here):
+      PYTHONPATH=src python -m repro.launch.train --arch gpt2_small_smoke \\
+          --algorithm dsm --tau 12 --steps 100
+    ``--arch`` accepts ``<id>`` (FULL config — only sensible on a real
+    cluster), ``<id>_smoke`` (reduced family variant), or ``nano``.
+  * plan              — prints the production launch plan for the 16x16 /
+    2x16x16 mesh (worker count, shardings, per-chip memory from the
+    dry-run artifact) without touching devices:
+      python -m repro.launch.train --arch deepseek_67b --plan
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+from repro.configs import ARCH_IDS, PAPER_ARCH_IDS, load_arch
+from repro.configs.base import ModelConfig
+
+
+def _resolve_arch(name: str) -> tuple[ModelConfig, object]:
+    if name == "nano":
+        from benchmarks.tables import NANO
+
+        cfg = NANO
+        topo = load_arch("gpt2_small").TOPO
+        return cfg, topo
+    if name.endswith("_smoke"):
+        mod = load_arch(name[: -len("_smoke")])
+        return mod.SMOKE, mod.TOPO
+    mod = load_arch(name)
+    return mod.FULL, mod.TOPO
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="nano")
+    ap.add_argument("--algorithm", default="dsm",
+                    choices=("dsm", "slowmo", "signed_slowmo", "lookahead",
+                             "signed_lookahead", "global_adamw", "local_avg",
+                             "perstep", "mv_signsgd"))
+    ap.add_argument("--base-opt", default=None)
+    ap.add_argument("--tau", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--n-workers", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--b-micro", type=int, default=4)
+    ap.add_argument("--peak-lr", type=float, default=5e-3)
+    ap.add_argument("--global-lr", type=float, default=0.3)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--plan", action="store_true")
+    args = ap.parse_args()
+
+    cfg, topo = _resolve_arch(args.arch)
+    tau = args.tau or topo.tau
+
+    if args.plan:
+        from repro.configs import specs as S
+
+        n = S.param_count(cfg)
+        plan = {
+            "arch": args.arch,
+            "params_B": round(n / 1e9, 3),
+            "mesh_single_pod": {"shape": [16, 16], "axes": ["data", "model"],
+                                "n_workers": topo.n_workers_single},
+            "mesh_multi_pod": {"shape": [2, 16, 16], "axes": ["pod", "data", "model"],
+                               "n_workers": topo.n_workers_multi},
+            "tau": tau,
+            "base_opt": topo.base_opt,
+            "grad_accum": topo.grad_accum,
+            "dryrun_cmd": (
+                f"PYTHONPATH=src python -m repro.launch.dryrun --arch {args.arch} "
+                f"--shape train_4k --mesh both"),
+        }
+        dr = f"experiments/dryrun/{args.arch}.train_4k.singlepod.json"
+        if os.path.exists(dr):
+            rec = json.load(open(dr))
+            plan["per_chip_peak_GB"] = round(rec["memory"]["peak_bytes"] / 1e9, 2)
+            plan["dominant_roofline_term"] = rec.get("dominant")
+        print(json.dumps(plan, indent=2))
+        return
+
+    from repro.data.pipeline import MarkovCorpus
+    from repro.train.trainer import TrainSettings, run_training
+
+    s = TrainSettings(
+        algorithm=args.algorithm, base_opt=args.base_opt or topo.base_opt,
+        n_workers=args.n_workers, tau=tau, steps=args.steps, seq=args.seq,
+        b_micro=args.b_micro, peak_lr=args.peak_lr, global_lr=args.global_lr,
+        eval_every=max(args.steps // 5, 1),
+    )
+    corpus = MarkovCorpus(cfg.vocab_size, seed=1)
+    result = run_training(cfg, s, corpus, log=print)
+    print(f"final eval loss: {result['final_eval']:.4f} "
+          f"(comm rounds: {result['comm_rounds']}, tokens: {result['tokens']})")
+
+    if args.checkpoint:
+        from repro.checkpoint import checkpoint as CK
+
+        CK.save(args.checkpoint, result["state"].x0
+                if hasattr(result["state"], "x0") else result["state"].params,
+                step=args.steps)
+        print(f"saved checkpoint to {args.checkpoint}.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Model zoo: unified pattern-driven transformer + SSM/RG-LRU/MoE blocks."""
+
+from repro.models.transformer import (
+    decode_step,
+    hidden_states,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)

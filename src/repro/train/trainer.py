@@ -1,0 +1,168 @@
+"""Training harness: runs any algorithm (DSM or baseline) on any ModelConfig.
+
+This is the engine behind the paper-reproduction experiments (benchmarks/)
+and the runnable examples.  CPU-scale by design: reduced configs, simulated
+workers (leading W axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DSMConfig,
+    cosine_with_warmup,
+    constant,
+    dsm_init,
+    get_base_optimizer,
+    make_dsm_step,
+)
+from repro.core import baselines as BL
+from repro.data.pipeline import MarkovCorpus, dsm_batches, eval_batch
+from repro.models import transformer as T
+
+ALGORITHMS = (
+    "dsm", "slowmo", "signed_slowmo", "lookahead", "signed_lookahead",
+    "global_adamw", "local_avg", "perstep", "mv_signsgd",
+)
+
+
+@dataclasses.dataclass
+class TrainSettings:
+    algorithm: str = "dsm"
+    base_opt: str = "adamw"
+    n_workers: int = 8
+    tau: int = 12
+    steps: int = 60                 # outer steps
+    b_micro: int = 4
+    seq: int = 128
+    peak_lr: float = 1e-3
+    warmup: int = 24
+    schedule: str = "cosine"
+    global_lr: float = 1.0          # eta (DSM) / alpha (SlowMo)
+    slow_beta: float = 0.5          # SlowMo / lookahead momentum
+    dsm_beta1: float = 0.95
+    dsm_beta2: float = 0.98
+    dsm_wd: float = 0.1
+    sign_mode: str = "sign"
+    seed: int = 0
+    eval_every: int = 10
+    eval_batch: int = 16
+    heterogeneous: bool = True
+    use_kernel: bool = False
+
+
+def _schedule(s: TrainSettings):
+    if s.schedule == "cosine":
+        return cosine_with_warmup(s.peak_lr, s.steps, warmup_steps=s.warmup)
+    return constant(s.peak_lr)
+
+
+def build_algorithm(loss_fn, s: TrainSettings):
+    """Returns (init(params, n_workers) -> state, step(state, batch[, rng]),
+    eval_params(state) -> params, comm_multiplier)."""
+    base = get_base_optimizer(s.base_opt)
+    sched = _schedule(s)
+
+    if s.algorithm in ("dsm", "signed_lookahead"):
+        cfg = DSMConfig(
+            tau=s.tau, global_lr=s.global_lr, beta1=s.dsm_beta1,
+            beta2=s.dsm_beta2, weight_decay=s.dsm_wd, sign_mode=s.sign_mode,
+            sign_bound=float(s.tau), use_kernel=s.use_kernel,
+        )
+        if s.algorithm == "signed_lookahead":
+            cfg = dataclasses.replace(cfg, beta1=s.slow_beta, beta2=s.slow_beta,
+                                      weight_decay=0.0)
+        step = make_dsm_step(loss_fn, base, cfg, sched)
+        needs_rng = s.sign_mode != "sign"
+
+        def init(params, n_workers):
+            return dsm_init(params, base, n_workers)
+
+        def stepper(state, batch, rng):
+            return step(state, batch, rng) if needs_rng else step(state, batch)
+
+        return init, stepper, lambda st: st.x0, 1.0
+
+    if s.algorithm in ("slowmo", "signed_slowmo", "lookahead", "global_adamw",
+                       "local_avg"):
+        maker = {
+            "slowmo": lambda: BL.slowmo(loss_fn, base, s.tau, sched,
+                                        beta=s.slow_beta, alpha=s.global_lr),
+            "signed_slowmo": lambda: BL.signed_slowmo(loss_fn, base, s.tau, sched,
+                                                      beta=s.slow_beta, eta=s.global_lr),
+            "lookahead": lambda: BL.lookahead(loss_fn, base, s.tau, sched,
+                                              beta=s.slow_beta, eta=s.global_lr),
+            "global_adamw": lambda: BL.global_adamw(loss_fn, base, s.tau, sched,
+                                                    eta=s.global_lr),
+            "local_avg": lambda: BL.local_avg(loss_fn, base, s.tau, sched),
+        }[s.algorithm]
+        init, step = maker()
+        return init, (lambda st, b, rng: step(st, b)), (lambda st: st.x0), 1.0
+
+    if s.algorithm == "perstep":
+        init, step = BL.make_perstep_dp_step(loss_fn, base, s.tau, sched)
+        return init, (lambda st, b, rng: step(st, b)), (lambda st: st.params), float(s.tau)
+
+    if s.algorithm == "mv_signsgd":
+        init, step = BL.make_mv_signsgd_step(
+            loss_fn, s.tau, gamma=s.peak_lr, eta=s.global_lr * s.peak_lr,
+            beta=s.slow_beta, bound=1.0,
+        )
+        return init, (lambda st, b, rng: step(st, b, rng)), (lambda st: st.x), 1.0
+
+    raise ValueError(f"unknown algorithm {s.algorithm!r}")
+
+
+def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = None):
+    """Train; returns dict(history, eval_losses, final_eval, tokens, comm_rounds)."""
+    corpus = corpus or MarkovCorpus(cfg.vocab_size, seed=1)
+    key = jax.random.PRNGKey(s.seed)
+    params = T.init_params(key, cfg)
+
+    def loss_fn(p, mb):
+        return T.loss_fn(p, mb, cfg, remat=False)
+
+    init, step, eval_params, comm_mult = build_algorithm(loss_fn, s)
+    state = init(params, s.n_workers)
+    jstep = jax.jit(step)
+    eval_loss_fn = jax.jit(lambda p, b: T.loss_fn(p, b, cfg, remat=False))
+
+    batches = dsm_batches(
+        corpus, s.n_workers, s.tau, 1, s.b_micro, s.seq,
+        seed=s.seed, heterogeneous=s.heterogeneous,
+    )
+    ev_batch = eval_batch(corpus, s.eval_batch, s.seq)
+    needs_accum = s.algorithm in ("dsm", "signed_lookahead")
+
+    history, evals = [], []
+    t0 = time.time()
+    for t in range(s.steps):
+        key, sub = jax.random.split(key)
+        batch = next(batches)
+        if not needs_accum:
+            batch = {k: v[:, :, 0] for k, v in batch.items()}
+        batch = jax.tree.map(jnp.asarray, batch)
+        state, metrics = jstep(state, batch, sub)
+        history.append(float(metrics["loss"]))
+        if (t + 1) % s.eval_every == 0 or t == s.steps - 1:
+            el = float(eval_loss_fn(eval_params(state), ev_batch))
+            evals.append((t + 1, el))
+            if log:
+                log(f"step {t+1:4d} train={history[-1]:.4f} eval={el:.4f}")
+
+    return {
+        "history": history,
+        "eval_losses": evals,
+        "final_eval": evals[-1][1] if evals else float("nan"),
+        "tokens": s.steps * s.tau * s.n_workers * s.b_micro * s.seq,
+        "comm_rounds": int(s.steps * comm_mult),
+        "wall_s": time.time() - t0,
+        "state": state,
+    }

@@ -1,0 +1,145 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import DSMConfig, randomized_sign_pm, randomized_sign_zero
+from repro.core.dsm import global_sign_momentum_step
+from repro.models.layers import ssd_chunked
+
+SET = settings(max_examples=20, deadline=None, derandomize=True)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 1: randomized sign operators are unbiased: E[S_r(v)] = v / B
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.floats(0.5, 4.0))
+def test_randomized_sign_pm_unbiased(seed, bound_scale):
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.uniform(key, (64,), minval=-1.0, maxval=1.0)
+    bound = float(jnp.linalg.norm(v)) * bound_scale  # ||v|| <= B required
+    keys = jax.random.split(jax.random.fold_in(key, 1), 4000)
+    samples = jax.vmap(lambda k: randomized_sign_pm(v, k, bound))(keys)
+    mean = samples.mean(axis=0)
+    # se of each coordinate mean ~ 1/sqrt(4000) = 0.016; max over 64 coords
+    # needs ~4 sigma of slack
+    np.testing.assert_allclose(
+        np.asarray(mean), np.asarray(v / bound), atol=8e-2
+    )
+    # variance bound: E||S_r(v) - v/B||^2 <= d
+    sq = ((samples - v / bound) ** 2).sum(-1).mean()
+    assert float(sq) <= v.shape[0] + 1.0
+
+
+@SET
+@given(st.integers(0, 2**31 - 1))
+def test_randomized_sign_zero_unbiased(seed):
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.uniform(key, (64,), minval=-1.0, maxval=1.0)
+    bound = float(jnp.linalg.norm(v)) * 1.5
+    keys = jax.random.split(jax.random.fold_in(key, 1), 4000)
+    samples = jax.vmap(lambda k: randomized_sign_zero(v, k, bound))(keys)
+    np.testing.assert_allclose(
+        np.asarray(samples.mean(0)), np.asarray(v / bound), atol=8e-2
+    )
+    vals = np.unique(np.asarray(samples))
+    assert set(vals).issubset({-1.0, 0.0, 1.0})
+
+
+# ---------------------------------------------------------------------------
+# Global-step invariants
+# ---------------------------------------------------------------------------
+
+@SET
+@given(
+    st.integers(0, 2**31 - 1),
+    st.floats(0.0, 0.999),
+    st.floats(0.0, 0.999),
+    st.floats(1e-4, 0.1),
+    st.floats(0.1, 3.0),
+)
+def test_global_step_finite_and_bounded(seed, b1, b2, gamma, eta):
+    key = jax.random.PRNGKey(seed)
+    x0 = {"w": jax.random.normal(key, (32,))}
+    m = {"w": jax.random.normal(jax.random.fold_in(key, 1), (32,))}
+    xt = {"w": x0["w"] - gamma * jax.random.normal(jax.random.fold_in(key, 2), (32,))}
+    cfg = DSMConfig(tau=2, global_lr=eta, beta1=b1, beta2=b2, weight_decay=0.0)
+    new_x, new_m = global_sign_momentum_step(x0, m, xt, jnp.float32(gamma), cfg)
+    assert np.isfinite(np.asarray(new_x["w"])).all()
+    assert np.isfinite(np.asarray(new_m["w"])).all()
+    # sign-update step size bound: |x_new - x0| <= eta*gamma  (lam=0),
+    # up to f32 rounding of (x0 - eta*gamma*s) - x0 (ulp(x0) >> ulp(step))
+    tol = eta * gamma * 1e-2 + 3e-7 * float(jnp.abs(x0["w"]).max())
+    assert np.all(np.abs(np.asarray(new_x["w"] - x0["w"])) <= eta * gamma + tol)
+    # m_new is a convex combination: ||m_new||_inf <= max(||m||_inf, ||delta||_inf)
+    delta = (x0["w"] - xt["w"]) / gamma
+    bound = max(float(jnp.abs(m["w"]).max()), float(jnp.abs(delta).max()))
+    assert float(jnp.abs(new_m["w"]).max()) <= bound * (1 + 1e-5) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD: chunked algorithm == naive linear recurrence
+# ---------------------------------------------------------------------------
+
+@SET
+@given(
+    st.integers(0, 2**31 - 1),
+    st.sampled_from([(1, 8, 2, 4, 4), (2, 16, 3, 8, 8), (1, 32, 1, 16, 4)]),
+)
+def test_ssd_chunked_matches_recurrence(seed, dims):
+    B, S, H, P, N = dims
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = jnp.exp(jax.random.uniform(ks[2], (H,), minval=-1.0, maxval=1.0))
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+
+    y_chunk = ssd_chunked(x, dt, A, Bm, Cm, chunk=min(8, S))
+
+    # naive: h_t = h_{t-1} * exp(-A dt_t) + dt_t * outer(B_t, x_t); y = C_t . h
+    h = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(-A[None, :] * dt[:, t])                     # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, t], Bm[:, t], x[:, t])
+        h = h * dA[..., None, None] + dBx
+        ys.append(jnp.einsum("bhpn,bn->bhp", h, Cm[:, t]))
+    y_naive = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_chunk), np.asarray(y_naive), rtol=2e-3, atol=2e-3
+    )
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracle under random shapes/dtypes
+# ---------------------------------------------------------------------------
+
+@SET
+@given(
+    st.integers(0, 2**31 - 1),
+    st.integers(1, 700),
+    st.sampled_from(["float32", "bfloat16"]),
+)
+def test_dsm_kernel_matches_ref_property(seed, n, dtype):
+    from repro.kernels import ops, ref
+
+    key = jax.random.PRNGKey(seed)
+    dt = jnp.dtype(dtype)
+    x0 = jax.random.normal(key, (n,), jnp.float32).astype(dt)
+    m = jax.random.normal(jax.random.fold_in(key, 1), (n,), jnp.float32)
+    xt = (x0.astype(jnp.float32) - 0.02).astype(dt)
+    gamma = jnp.float32(0.01)
+    hp = dict(eta=1.0, beta1=0.95, beta2=0.98, lam=0.1)
+    xr, mr = ref.dsm_update_ref(x0, m, xt, gamma, **hp)
+    xk, mk = ops.dsm_update_tree({"a": x0}, {"a": m}, {"a": xt}, gamma, **hp)
+    np.testing.assert_allclose(
+        np.asarray(xk["a"], np.float32), np.asarray(xr, np.float32),
+        rtol=1e-4, atol=1e-4,
+    )
+    np.testing.assert_allclose(np.asarray(mk["a"]), np.asarray(mr), rtol=1e-5, atol=1e-5)
