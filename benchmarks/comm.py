@@ -10,11 +10,23 @@ from repro.configs import load_arch
 from repro.configs import specs as S
 
 
+GLOBAL_STATE_BYTES = 4      # x0 and m are f32 by default
+GLOBAL_STEP_PASSES = 5      # HBM traffic of eqs. 6-8: read x0, m, x_tau; write x0, m
+
+
 def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
-                         param_bytes: int = 2) -> dict:
+                         param_bytes: int = 2, zero_sharded: bool = False,
+                         shards: int = 1) -> dict:
     """Inter-worker (slow-network) bytes per tau local steps, per the
     all-reduce ~ 2x payload ring model.  Intra-worker TP traffic excluded
-    (that is the fast-network budget)."""
+    (that is the fast-network budget).
+
+    ``zero_sharded`` / ``shards``: DSM's ZeRO-sharded global step over
+    R = worker * zero ranks.  Wire bytes are unchanged (reduce-scatter +
+    all-gather ~ one all-reduce), but each rank now holds and updates only
+    1/R of the global x0 / m buffers — the per-rank HBM figures below are
+    what the sharding buys.
+    """
     cfg = load_arch(arch_id).FULL
     n = S.param_count(cfg)
     payload = n * param_bytes
@@ -30,9 +42,23 @@ def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
         rounds = 1
     else:
         raise ValueError(algo)
-    return {
+    out = {
         "arch": arch_id, "algo": algo, "tau": tau,
         "wire_bytes_per_outer": wire,
         "comm_rounds_per_outer": rounds,
         "reduction_vs_perstep": (2 * payload * tau) / max(wire, 1),
     }
+    if algo == "dsm":
+        r = shards if zero_sharded else 1
+        out["zero_sharded"] = zero_sharded
+        out["global_state_shards"] = r
+        # per-rank residency of the global buffers (x0 + m) ...
+        out["global_state_bytes_per_rank"] = 2 * n * GLOBAL_STATE_BYTES // r
+        # ... and per-rank HBM traffic of the global update itself
+        out["global_buffer_bytes_per_rank"] = (
+            GLOBAL_STEP_PASSES * n * GLOBAL_STATE_BYTES // r
+        )
+        # bytes each rank sources into the x_{t+1,0} all-gather (replicated
+        # ranks all recompute the full update; sharded ranks own 1/R of it)
+        out["broadcast_src_bytes_per_rank"] = payload // r
+    return out

@@ -115,11 +115,17 @@ def dsm_init(
     base_opt: BaseOptimizer,
     n_workers: int,
     momentum_dtype=jnp.float32,
+    mesh=None,
 ) -> DSMState:
-    """Initialize Algorithm 1 state from a single (global) param pytree."""
+    """Initialize Algorithm 1 state from a single (global) param pytree.
+
+    With ``mesh`` (a ``("worker", "zero", "model")`` training mesh) the state
+    is laid out for the ZeRO-sharded global step: x0 / m sharded over
+    (worker, zero), per-worker params / base state sharded over worker.
+    """
     worker_params = _broadcast_workers(params, n_workers)
     base_state = jax.vmap(base_opt.init)(worker_params)
-    return DSMState(
+    state = DSMState(
         params=worker_params,
         x0=params,
         m=jax.tree.map(lambda p: jnp.zeros_like(p, dtype=momentum_dtype), params),
@@ -127,6 +133,11 @@ def dsm_init(
         t=jnp.zeros((), jnp.int32),
         inner=jnp.zeros((), jnp.int32),
     )
+    if mesh is not None:
+        from repro.distributed import zero as Z
+
+        state = Z.shard_dsm_state(state, mesh)
+    return state
 
 
 # ---------------------------------------------------------------------------
@@ -145,13 +156,17 @@ def global_sign_momentum_step(
 ) -> tuple[PyTree, PyTree]:
     """Apply eqs. (6)-(8) leafwise; returns (x_{t+1,0}, m_{t+1})."""
     if cfg.use_kernel:
-        from repro.kernels import ops as kernel_ops
+        # The fused kernel implements the deterministic sign only; the
+        # randomized operators (eqs. 9/10) fall back to the jnp path rather
+        # than silently applying the wrong sign.
+        if cfg.sign_mode == "sign":
+            from repro.kernels import ops as kernel_ops
 
-        return kernel_ops.dsm_update_tree(
-            x0, m, x_tau_mean, gamma,
-            eta=cfg.global_lr, beta1=cfg.beta1, beta2=cfg.beta2,
-            lam=cfg.weight_decay,
-        )
+            return kernel_ops.dsm_update_tree(
+                x0, m, x_tau_mean, gamma,
+                eta=cfg.global_lr, beta1=cfg.beta1, beta2=cfg.beta2,
+                lam=cfg.weight_decay,
+            )
 
     leaves, treedef = jax.tree.flatten(x0)
     if cfg.sign_mode == "sign":
@@ -194,6 +209,7 @@ def make_dsm_step(
     base_opt: BaseOptimizer,
     cfg: DSMConfig,
     schedule: Callable[[jnp.ndarray], jnp.ndarray],
+    mesh=None,
 ):
     """Build ``outer_step(state, batch[, rng]) -> (state, metrics)``.
 
@@ -202,6 +218,11 @@ def make_dsm_step(
     gradient-accumulation microbatches inside each local step.
     ``loss_fn(params, microbatch)`` consumes single-worker params and one
     ``(B_micro, ...)`` microbatch.
+
+    With ``cfg.zero_sharded`` and a ``("worker", "zero", "model")`` mesh, the
+    global step runs ZeRO-sharded (repro.distributed.zero): reduce-scatter of
+    x_tau, shard-local update of x0 / m, all-gather of x_{t+1,0} via the
+    worker broadcast.
     """
 
     grad_fn = jax.value_and_grad(loss_fn)
@@ -257,17 +278,30 @@ def make_dsm_step(
             state.params, state.base_state, batch, gamma, state.inner
         )
 
-        # --- line 7: THE all-reduce over workers (once per tau local steps) ---
-        x_tau_mean = jax.tree.map(lambda p: p.mean(axis=0), params_w)
+        if cfg.zero_sharded and mesh is not None:
+            # --- lines 7-10, ZeRO-sharded: reduce-scatter(x_tau) ->
+            # shard-local sign momentum on each rank's 1/(W*zero) slice ---
+            from repro.distributed import zero as Z
 
-        # --- lines 8-10: global sign momentum ---
-        new_x0, new_m = global_sign_momentum_step(
-            state.x0, state.m, x_tau_mean, gamma, cfg, rng
-        )
+            new_x0, new_m = Z.sharded_global_sign_momentum_step(
+                state.x0, state.m, params_w, gamma, cfg, mesh, rng
+            )
+        else:
+            # --- line 7: THE all-reduce over workers (once per tau local steps) ---
+            x_tau_mean = jax.tree.map(lambda p: p.mean(axis=0), params_w)
 
-        # --- line 11: synchronize workers ---
+            # --- lines 8-10: global sign momentum ---
+            new_x0, new_m = global_sign_momentum_step(
+                state.x0, state.m, x_tau_mean, gamma, cfg, rng
+            )
+
+        # --- line 11: synchronize workers (the all-gather when sharded) ---
         n_workers = jax.tree.leaves(state.params)[0].shape[0]
         new_params = _broadcast_workers(new_x0, n_workers)
+        if cfg.zero_sharded and mesh is not None:
+            from repro.distributed import zero as Z
+
+            new_params = Z.constrain_workers(new_params, mesh)
 
         new_state = DSMState(
             params=new_params,

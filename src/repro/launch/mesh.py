@@ -36,6 +36,25 @@ def training_mesh(base_mesh: Mesh, n_workers: int) -> Mesh:
     return Mesh(grid, ("worker", "zero", "model"))
 
 
+def host_training_mesh(n_workers: int, model: int = 1) -> Mesh:
+    """(worker, zero, model) mesh over the *local* devices.
+
+    Used by the trainer's ZeRO-sharded path (and the device-parallel tests
+    under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  The
+    worker axis matches ``n_workers`` when the device count allows;
+    otherwise it degrades to worker=1 (pure zero sharding), so the same
+    code runs on a single CPU device.
+    """
+    devices = np.array(jax.devices())
+    n = (len(devices) // model) * model
+    assert n >= 1, "no devices"
+    rows = n // model
+    worker = n_workers if rows % n_workers == 0 and rows >= n_workers else 1
+    zero = rows // worker
+    grid = devices[: worker * zero * model].reshape(worker, zero, model)
+    return Mesh(grid, ("worker", "zero", "model"))
+
+
 def serving_mesh(base_mesh: Mesh) -> Mesh:
     """Reshape into (data, model) with pod folded into data."""
     devices = np.asarray(base_mesh.devices)

@@ -53,6 +53,11 @@ def main():
     ap.add_argument("--peak-lr", type=float, default=5e-3)
     ap.add_argument("--global-lr", type=float, default=0.3)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="fused Pallas kernel for the DSM global step")
+    ap.add_argument("--zero-sharded", action="store_true",
+                    help="ZeRO-sharded global step over the local devices "
+                         "(shard x0/m over worker*zero ranks)")
     ap.add_argument("--plan", action="store_true")
     args = ap.parse_args()
 
@@ -93,6 +98,7 @@ def main():
         n_workers=args.n_workers, tau=tau, steps=args.steps, seq=args.seq,
         b_micro=args.b_micro, peak_lr=args.peak_lr, global_lr=args.global_lr,
         eval_every=max(args.steps // 5, 1),
+        use_kernel=args.use_kernel, zero_sharded=args.zero_sharded,
     )
     corpus = MarkovCorpus(cfg.vocab_size, seed=1)
     result = run_training(cfg, s, corpus, log=print)

@@ -56,6 +56,7 @@ class TrainSettings:
     eval_batch: int = 16
     heterogeneous: bool = True
     use_kernel: bool = False
+    zero_sharded: bool = False      # ZeRO-sharded global step over local devices
 
 
 def _schedule(s: TrainSettings):
@@ -64,9 +65,13 @@ def _schedule(s: TrainSettings):
     return constant(s.peak_lr)
 
 
-def build_algorithm(loss_fn, s: TrainSettings):
+def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
     """Returns (init(params, n_workers) -> state, step(state, batch[, rng]),
-    eval_params(state) -> params, comm_multiplier)."""
+    eval_params(state) -> params, comm_multiplier).
+
+    ``mesh``: optional ("worker", "zero", "model") mesh; with
+    ``s.zero_sharded`` the DSM global step runs ZeRO-sharded on it.
+    """
     base = get_base_optimizer(s.base_opt)
     sched = _schedule(s)
 
@@ -75,15 +80,16 @@ def build_algorithm(loss_fn, s: TrainSettings):
             tau=s.tau, global_lr=s.global_lr, beta1=s.dsm_beta1,
             beta2=s.dsm_beta2, weight_decay=s.dsm_wd, sign_mode=s.sign_mode,
             sign_bound=float(s.tau), use_kernel=s.use_kernel,
+            zero_sharded=s.zero_sharded,
         )
         if s.algorithm == "signed_lookahead":
             cfg = dataclasses.replace(cfg, beta1=s.slow_beta, beta2=s.slow_beta,
                                       weight_decay=0.0)
-        step = make_dsm_step(loss_fn, base, cfg, sched)
+        step = make_dsm_step(loss_fn, base, cfg, sched, mesh=mesh)
         needs_rng = s.sign_mode != "sign"
 
         def init(params, n_workers):
-            return dsm_init(params, base, n_workers)
+            return dsm_init(params, base, n_workers, mesh=mesh)
 
         def stepper(state, batch, rng):
             return step(state, batch, rng) if needs_rng else step(state, batch)
@@ -129,7 +135,13 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
     def loss_fn(p, mb):
         return T.loss_fn(p, mb, cfg, remat=False)
 
-    init, step, eval_params, comm_mult = build_algorithm(loss_fn, s)
+    mesh = None
+    if s.zero_sharded:
+        from repro.launch.mesh import host_training_mesh
+
+        mesh = host_training_mesh(s.n_workers)
+
+    init, step, eval_params, comm_mult = build_algorithm(loss_fn, s, mesh=mesh)
     state = init(params, s.n_workers)
     jstep = jax.jit(step)
     eval_loss_fn = jax.jit(lambda p, b: T.loss_fn(p, b, cfg, remat=False))

@@ -113,6 +113,30 @@ def test_kernel_path_matches_jnp_path():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 
 
+def test_kernel_with_randomized_sign_falls_back_to_jnp():
+    """Regression: use_kernel=True used to silently apply the deterministic
+    sign for rand_pm / rand_zero.  The kernel only implements sign; the
+    randomized modes must take the jnp path and match it exactly."""
+    key = jax.random.PRNGKey(8)
+    x0 = {"w": jax.random.normal(key, (256,))}
+    m = {"w": 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (256,))}
+    xt = {"w": x0["w"] - 0.03 * jax.random.normal(jax.random.fold_in(key, 2), (256,))}
+    gamma = jnp.float32(0.01)
+    rng = jax.random.PRNGKey(99)
+    for mode in ("rand_pm", "rand_zero"):
+        cfg_jnp = DSMConfig(tau=2, sign_mode=mode, sign_bound=8.0)
+        cfg_ker = DSMConfig(tau=2, sign_mode=mode, sign_bound=8.0, use_kernel=True)
+        xr, mr = global_sign_momentum_step(x0, m, xt, gamma, cfg_jnp, rng)
+        xk, mk = global_sign_momentum_step(x0, m, xt, gamma, cfg_ker, rng)
+        np.testing.assert_array_equal(np.asarray(xr["w"]), np.asarray(xk["w"]))
+        np.testing.assert_array_equal(np.asarray(mr["w"]), np.asarray(mk["w"]))
+        # and the randomized sign really was applied: moves differ from the
+        # deterministic-sign kernel update somewhere
+        xd, _ = global_sign_momentum_step(
+            x0, m, xt, gamma, DSMConfig(tau=2, use_kernel=True))
+        assert np.any(np.asarray(xk["w"]) != np.asarray(xd["w"])), mode
+
+
 def test_sign_update_magnitude():
     """Every coordinate moves by exactly eta*gamma (+wd term): sign in {-1,0,1}."""
     key = jax.random.PRNGKey(5)

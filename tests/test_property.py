@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import DSMConfig, randomized_sign_pm, randomized_sign_zero

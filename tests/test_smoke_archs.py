@@ -16,6 +16,20 @@ from repro.models import transformer as T
 
 ALL_IDS = ARCH_IDS + PAPER_ARCH_IDS
 
+# archs whose smoke step takes >~8s on CPU (recurrent scans, MoE routing,
+# audio/VLM encoders): tier-2.  The cheap decoder-only ones stay in tier-1
+# so every commit still exercises the full forward+DSM+decode path.
+_SLOW_ARCHS = {
+    "recurrentgemma_2b", "llama4_maverick_400b_a17b", "mamba2_780m",
+    "whisper_large_v3", "minitron_4b", "deepseek_67b", "llava_next_34b",
+    "granite_moe_3b_a800m", "gpt2_large", "gemma3_1b",
+}
+_PARAMS = [
+    pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_ARCHS
+    else pytest.param(a)
+    for a in ALL_IDS
+]
+
 
 def _smoke_batch(cfg, key, W=2, tau=2, accum=1, B=2, S=32):
     lead = (W, tau, accum, B)
@@ -31,7 +45,7 @@ def _smoke_batch(cfg, key, W=2, tau=2, accum=1, B=2, S=32):
     return batch
 
 
-@pytest.mark.parametrize("arch_id", ALL_IDS)
+@pytest.mark.parametrize("arch_id", _PARAMS)
 def test_smoke_forward_and_train_step(arch_id):
     mod = load_arch(arch_id)
     cfg, topo = mod.SMOKE, mod.TOPO

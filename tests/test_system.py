@@ -1,9 +1,16 @@
-"""End-to-end behaviour tests: the paper's qualitative claims at CPU scale."""
+"""End-to-end behaviour tests: the paper's qualitative claims at CPU scale.
+
+Every test here trains for real (minutes each on CPU), so the whole module
+is tier-2: marked slow, deselected by the default -m "not slow" invocation,
+run by the scheduled CI job.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs.base import ModelConfig
 from repro.data.pipeline import MarkovCorpus
