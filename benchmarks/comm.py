@@ -14,9 +14,14 @@ GLOBAL_STATE_BYTES = 4      # x0 and m are f32 by default
 GLOBAL_STEP_PASSES = 5      # HBM traffic of eqs. 6-8: read x0, m, x_tau; write x0, m
 
 
+LOCAL_STEP_ALGOS = ("dsm", "slowmo", "signed_slowmo", "lookahead",
+                    "global_adamw", "local_avg")
+
+
 def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
                          param_bytes: int = 2, zero_sharded: bool = False,
-                         shards: int = 1) -> dict:
+                         shards: int = 1, device_parallel: bool = False,
+                         n_workers: int = 8) -> dict:
     """Inter-worker (slow-network) bytes per tau local steps, per the
     all-reduce ~ 2x payload ring model.  Intra-worker TP traffic excluded
     (that is the fast-network budget).
@@ -26,6 +31,13 @@ def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
     all-gather ~ one all-reduce), but each rank now holds and updates only
     1/R of the global x0 / m buffers — the per-rank HBM figures below are
     what the sharding buys.
+
+    ``device_parallel`` / ``n_workers``: the local phase's execution layout.
+    The vmapped simulation replicates all ``n_workers`` workers' tau local
+    steps onto every rank; the shard_mapped layout runs exactly one worker's
+    share per rank (wire bytes unchanged — the local phase is collective-free
+    either way).  ``local_step_flops_replication`` is the per-rank local
+    compute multiplier the layout implies.
     """
     cfg = load_arch(arch_id).FULL
     n = S.param_count(cfg)
@@ -48,6 +60,9 @@ def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
         "comm_rounds_per_outer": rounds,
         "reduction_vs_perstep": (2 * payload * tau) / max(wire, 1),
     }
+    if algo in LOCAL_STEP_ALGOS:
+        out["local_phase_device_parallel"] = device_parallel
+        out["local_step_flops_replication"] = 1 if device_parallel else n_workers
     if algo == "dsm":
         r = shards if zero_sharded else 1
         out["zero_sharded"] = zero_sharded

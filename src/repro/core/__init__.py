@@ -15,6 +15,7 @@ from repro.core.dsm import (
     dsm_init,
     global_sign_momentum_step,
     make_dsm_step,
+    make_local_phase,
     randomized_sign_pm,
     randomized_sign_zero,
     signed_lookahead_config,

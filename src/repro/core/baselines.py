@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.base_opt import BaseOptimizer, adamw
-from repro.core.dsm import _broadcast_workers, randomized_sign_pm
+from repro.core.dsm import _broadcast_workers, make_local_phase, randomized_sign_pm
 
 PyTree = Any
 
@@ -45,17 +45,26 @@ def make_local_step_method(
     schedule: Callable,
     init_aux: Callable[[PyTree], PyTree],
     global_update: Callable[[PyTree, PyTree, PyTree, jnp.ndarray, jnp.ndarray], tuple],
+    device_parallel: bool = False,
+    mesh=None,
 ):
     """Generic: tau local steps -> all-reduce -> ``global_update`` -> sync.
 
     ``global_update(x0, aux, x_tau_mean, gamma, t) -> (new_x0, new_aux)``.
+
+    The local phase is DSM's (repro.core.dsm.make_local_phase) without the
+    accumulation axis; with ``device_parallel`` + a worker mesh it runs
+    shard_mapped over the worker axis, like DSM's.
     """
 
-    grad_fn = jax.value_and_grad(loss_fn)
+    local_phase = make_local_phase(
+        loss_fn, base_opt, accum=False,
+        device_parallel=device_parallel, mesh=mesh,
+    )
 
     def init(params: PyTree, n_workers: int) -> LocalMethodState:
         wp = _broadcast_workers(params, n_workers)
-        return LocalMethodState(
+        state = LocalMethodState(
             params=wp,
             x0=params,
             aux=init_aux(params),
@@ -63,48 +72,45 @@ def make_local_step_method(
             t=jnp.zeros((), jnp.int32),
             inner=jnp.zeros((), jnp.int32),
         )
+        if mesh is not None:
+            from repro.distributed import zero as Z
+
+            state = state._replace(
+                params=jax.tree.map(
+                    lambda x: jax.device_put(x, Z.worker_sharding(mesh)),
+                    state.params),
+                base_state=jax.tree.map(
+                    lambda x: jax.device_put(x, Z.worker_sharding(mesh))
+                    if getattr(x, "ndim", 0) >= 1 else x,
+                    state.base_state),
+            )
+        return state
 
     def outer_step(state: LocalMethodState, batch):
         gamma = schedule(state.t)
 
-        def one_local_step(carry, microbatch):
-            params, base_state, k = carry
-
-            def per_worker(p, bs, mb):
-                loss, grads = grad_fn(p, mb)
-                d, new_bs = base_opt.direction(grads, bs, p, state.inner + k)
-                new_p = jax.tree.map(
-                    lambda x, dd: (
-                        x.astype(jnp.float32) - gamma * dd.astype(jnp.float32)
-                    ).astype(x.dtype),
-                    p, d,
-                )
-                return new_p, new_bs, loss
-
-            new_params, new_base, losses = jax.vmap(per_worker)(
-                params, base_state, microbatch
-            )
-            return (new_params, new_base, k + 1), losses.mean()
-
-        mb_scan = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)
-        (params_w, base_state_w, _), losses = jax.lax.scan(
-            one_local_step,
-            (state.params, state.base_state, jnp.zeros((), jnp.int32)),
-            mb_scan,
+        params_w, base_state_w, losses = local_phase(
+            state.params, state.base_state, batch, gamma, state.inner
         )
 
         x_tau_mean = jax.tree.map(lambda p: p.mean(axis=0), params_w)  # all-reduce
         new_x0, new_aux = global_update(state.x0, state.aux, x_tau_mean, gamma, state.t)
 
         n_workers = jax.tree.leaves(state.params)[0].shape[0]
+        new_params = _broadcast_workers(new_x0, n_workers)
+        if mesh is not None:
+            from repro.distributed import zero as Z
+
+            new_params = Z.constrain_workers(new_params, mesh)
         new_state = LocalMethodState(
-            params=_broadcast_workers(new_x0, n_workers),
+            params=new_params,
             x0=new_x0,
             aux=new_aux,
             base_state=base_state_w,
             t=state.t + 1,
             inner=state.inner + tau,
         )
+        # losses is (tau, W); reduce outside the collective-free local phase
         return new_state, {"loss": losses.mean(), "gamma": gamma}
 
     return init, outer_step
@@ -118,7 +124,8 @@ def _f32(x):
     return x.astype(jnp.float32)
 
 
-def slowmo(loss_fn, base_opt, tau, schedule, beta: float = 0.5, alpha: float = 1.0):
+def slowmo(loss_fn, base_opt, tau, schedule, beta: float = 0.5, alpha: float = 1.0,
+           **local_kw):
     """SlowMo (Alg. 5): u <- beta*u + Delta ; x <- x0 - alpha*gamma*u."""
 
     def init_aux(params):
@@ -133,10 +140,12 @@ def slowmo(loss_fn, base_opt, tau, schedule, beta: float = 0.5, alpha: float = 1
         )
         return new_x, new_u
 
-    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux, global_update)
+    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux,
+                                  global_update, **local_kw)
 
 
-def signed_slowmo(loss_fn, base_opt, tau, schedule, beta: float = 0.5, eta: float = 1.0):
+def signed_slowmo(loss_fn, base_opt, tau, schedule, beta: float = 0.5, eta: float = 1.0,
+                  **local_kw):
     """§4.1: u <- beta*m + (1-beta)*sign(x0-x_tau)/gamma ... wait — as printed:
     u_{t+1} = beta*m_t + ((1-beta)/gamma)*sign(x0 - x_tau); x <- x0 - eta*gamma*u.
     We implement exactly the printed form (sign taken *before* momentum)."""
@@ -155,10 +164,12 @@ def signed_slowmo(loss_fn, base_opt, tau, schedule, beta: float = 0.5, eta: floa
         )
         return new_x, new_m
 
-    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux, global_update)
+    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux,
+                                  global_update, **local_kw)
 
 
-def lookahead(loss_fn, base_opt, tau, schedule, beta: float = 0.2, eta: float = 1.0):
+def lookahead(loss_fn, base_opt, tau, schedule, beta: float = 0.2, eta: float = 1.0,
+              **local_kw):
     """Lookahead (§4.1): DSM with (7) replaced by x <- x0 - eta*gamma*u (no sign)."""
 
     def init_aux(params):
@@ -172,10 +183,11 @@ def lookahead(loss_fn, base_opt, tau, schedule, beta: float = 0.2, eta: float = 
         )
         return new_x, u
 
-    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux, global_update)
+    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux,
+                                  global_update, **local_kw)
 
 
-def local_avg(loss_fn, base_opt, tau, schedule):
+def local_avg(loss_fn, base_opt, tau, schedule, **local_kw):
     """Local AdamW / FedAvg-style: x <- mean_i x^{(i)}_{t,tau} (App. C.2)."""
 
     def init_aux(params):
@@ -184,7 +196,8 @@ def local_avg(loss_fn, base_opt, tau, schedule):
     def global_update(x0, aux, x_tau, gamma, t):
         return x_tau, aux
 
-    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux, global_update)
+    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux,
+                                  global_update, **local_kw)
 
 
 class _GlobalAdamWAux(NamedTuple):
@@ -195,7 +208,7 @@ class _GlobalAdamWAux(NamedTuple):
 def global_adamw(
     loss_fn, base_opt, tau, schedule,
     eta: float = 1.0, b1: float = 0.9, b2: float = 0.95,
-    weight_decay: float = 0.0, eps: float = 1e-8,
+    weight_decay: float = 0.0, eps: float = 1e-8, **local_kw,
 ):
     """Alg. 7: AdamW on the pseudo-gradient g = (x0 - x_tau)/gamma."""
 
@@ -216,7 +229,8 @@ def global_adamw(
 
         return jax.tree.map(_upd, x0, new_m, new_v), _GlobalAdamWAux(new_m, new_v)
 
-    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux, global_update)
+    return make_local_step_method(loss_fn, base_opt, tau, schedule, init_aux,
+                                  global_update, **local_kw)
 
 
 # ---------------------------------------------------------------------------

@@ -85,6 +85,7 @@ class DSMConfig:
     sign_bound: float = 1.0       # B for randomized sign (theory uses tau*R)
     zero_sharded: bool = False    # beyond-paper: ZeRO-style sharded global step
     use_kernel: bool = False      # fused Pallas kernel for the global step
+    device_parallel_local: bool = False  # shard_map the local phase over "worker"
 
     def __post_init__(self):
         if self.sign_mode not in SIGN_MODES:
@@ -116,12 +117,16 @@ def dsm_init(
     n_workers: int,
     momentum_dtype=jnp.float32,
     mesh=None,
+    global_sharded: bool = True,
 ) -> DSMState:
     """Initialize Algorithm 1 state from a single (global) param pytree.
 
-    With ``mesh`` (a ``("worker", "zero", "model")`` training mesh) the state
-    is laid out for the ZeRO-sharded global step: x0 / m sharded over
-    (worker, zero), per-worker params / base state sharded over worker.
+    With ``mesh`` (a ``("worker", "zero", "model")`` training mesh) the
+    per-worker params / base state are sharded over the worker axis, and —
+    when ``global_sharded`` — x0 / m are laid out for the ZeRO-sharded
+    global step (sharded over the flattened (worker, zero) ranks).  A
+    device-parallel local phase without ``zero_sharded`` keeps x0 / m
+    replicated (``global_sharded=False``).
     """
     worker_params = _broadcast_workers(params, n_workers)
     base_state = jax.vmap(base_opt.init)(worker_params)
@@ -136,7 +141,7 @@ def dsm_init(
     if mesh is not None:
         from repro.distributed import zero as Z
 
-        state = Z.shard_dsm_state(state, mesh)
+        state = Z.shard_dsm_state(state, mesh, global_sharded=global_sharded)
     return state
 
 
@@ -201,6 +206,123 @@ def global_sign_momentum_step(
 
 
 # ---------------------------------------------------------------------------
+# Local phase (Algorithm 1 lines 3-6), shared by DSM and the local-step
+# baselines.  Two execution layouts, numerically identical:
+#
+#   * vmapped (default): the worker axis W lives on one device and is mapped
+#     with jax.vmap — a *simulation* of n workers (replicated compute).
+#   * device-parallel (``device_parallel=True`` + mesh): the same body runs
+#     under shard_map with every per-worker input sharded P("worker"), so
+#     each device executes only its own worker block.  The body contains no
+#     psum/ppermute and never reads across the worker axis, so the compiled
+#     local phase emits ZERO inter-worker collectives by construction — the
+#     paper's premise that tau local steps are communication-free.
+#     Per-worker losses are returned unreduced (tau, W); the caller averages
+#     them *outside* the local phase, where a collective is expected anyway.
+# ---------------------------------------------------------------------------
+
+def make_local_phase(
+    loss_fn: Callable[[PyTree, Any], jnp.ndarray],
+    base_opt: BaseOptimizer,
+    *,
+    accum: bool = True,
+    device_parallel: bool = False,
+    mesh=None,
+):
+    """Build ``local_phase(params_w, base_state_w, batch, gamma, inner0) ->
+    (params_w, base_state_w, losses)`` with ``losses`` shaped ``(tau, W)``.
+
+    ``accum``: batch leaves carry a gradient-accumulation axis —
+    ``(W, tau, accum, B_micro, ...)`` — consumed by an inner scan; otherwise
+    leaves are ``(W, tau, B, ...)`` and each local step is one minibatch.
+    """
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def local_phase_block(params_w, base_state_w, batch, gamma, inner0):
+        """tau local steps over whatever worker block the caller holds."""
+
+        def one_local_step(carry, microbatch):
+            params, base_state, k = carry
+
+            def per_worker(p, bs, mb):
+                if accum:
+                    # mb leaves: (accum, B_micro, ...) -> accumulate grads
+                    def acc_step(carry, mbi):
+                        g_sum, loss_sum = carry
+                        loss, g = grad_fn(p, mbi)
+                        return (
+                            jax.tree.map(jnp.add, g_sum, g),
+                            loss_sum + loss,
+                        ), None
+
+                    acc = jax.tree.leaves(mb)[0].shape[0]
+                    g0 = jax.tree.map(lambda x: jnp.zeros_like(x), p)
+                    (g_sum, loss_sum), _ = jax.lax.scan(
+                        acc_step, (g0, jnp.zeros((), jnp.float32)), mb
+                    )
+                    grads = jax.tree.map(lambda g: g / acc, g_sum)
+                    loss = loss_sum / acc
+                else:
+                    loss, grads = grad_fn(p, mb)
+                d, new_bs = base_opt.direction(grads, bs, p, inner0 + k)
+                new_p = jax.tree.map(
+                    lambda x, dd: (
+                        x.astype(jnp.float32) - gamma * dd.astype(jnp.float32)
+                    ).astype(x.dtype),
+                    p, d,
+                )
+                return new_p, new_bs, loss
+
+            new_params, new_base, losses = jax.vmap(per_worker)(
+                params, base_state, microbatch
+            )
+            return (new_params, new_base, k + 1), losses  # (W_block,)
+
+        # scan over the tau microbatches: batch leaves (W, tau, ...) -> (tau, W, ...)
+        mb_scan = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)
+        (params_w, base_state_w, _), losses = jax.lax.scan(
+            one_local_step, (params_w, base_state_w, jnp.zeros((), jnp.int32)), mb_scan
+        )
+        return params_w, base_state_w, losses  # losses: (tau, W_block)
+
+    if not device_parallel:
+        return local_phase_block
+
+    if mesh is None or "worker" not in mesh.axis_names:
+        raise ValueError(
+            "device_parallel local phase needs a mesh with a 'worker' axis "
+            "(repro.launch.mesh.training_mesh / host_training_mesh)"
+        )
+
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.compat import shard_map
+
+    wspec = P("worker")
+    n_worker_devices = dict(zip(mesh.axis_names, mesh.devices.shape))["worker"]
+    sharded_block = shard_map(
+        local_phase_block,
+        mesh=mesh,
+        in_specs=(wspec, wspec, wspec, P(), P()),
+        out_specs=(wspec, wspec, P(None, "worker")),
+        check_rep=False,
+    )
+
+    def local_phase(params_w, base_state_w, batch, gamma, inner0):
+        n_workers = jax.tree.leaves(params_w)[0].shape[0]
+        if n_workers % n_worker_devices:
+            raise ValueError(
+                f"n_workers={n_workers} must be a multiple of the mesh's "
+                f"worker axis ({n_worker_devices}) for the device-parallel "
+                "local phase"
+            )
+        return sharded_block(params_w, base_state_w, batch, gamma, inner0)
+
+    return local_phase
+
+
+# ---------------------------------------------------------------------------
 # Outer-step factory
 # ---------------------------------------------------------------------------
 
@@ -222,54 +344,15 @@ def make_dsm_step(
     With ``cfg.zero_sharded`` and a ``("worker", "zero", "model")`` mesh, the
     global step runs ZeRO-sharded (repro.distributed.zero): reduce-scatter of
     x_tau, shard-local update of x0 / m, all-gather of x_{t+1,0} via the
-    worker broadcast.
+    worker broadcast.  With ``cfg.device_parallel_local`` the tau local steps
+    run under shard_map with every per-worker buffer sharded over the mesh's
+    worker axis — genuinely data-parallel, zero inter-worker collectives.
     """
 
-    grad_fn = jax.value_and_grad(loss_fn)
-
-    def local_phase(params_w, base_state_w, batch, gamma, inner0):
-        """tau local steps, vmapped over the worker axis. No (pod,data) comms."""
-
-        def one_local_step(carry, microbatch):
-            params, base_state, k = carry
-
-            def per_worker(p, bs, mb):
-                # mb leaves: (accum, B_micro, ...) -> accumulate grads
-                def acc_step(carry, mbi):
-                    g_sum, loss_sum = carry
-                    loss, g = grad_fn(p, mbi)
-                    return (
-                        jax.tree.map(jnp.add, g_sum, g),
-                        loss_sum + loss,
-                    ), None
-
-                acc = jax.tree.leaves(mb)[0].shape[0]
-                g0 = jax.tree.map(lambda x: jnp.zeros_like(x), p)
-                (g_sum, loss_sum), _ = jax.lax.scan(
-                    acc_step, (g0, jnp.zeros((), jnp.float32)), mb
-                )
-                grads = jax.tree.map(lambda g: g / acc, g_sum)
-                loss = loss_sum / acc
-                d, new_bs = base_opt.direction(grads, bs, p, inner0 + k)
-                new_p = jax.tree.map(
-                    lambda x, dd: (
-                        x.astype(jnp.float32) - gamma * dd.astype(jnp.float32)
-                    ).astype(x.dtype),
-                    p, d,
-                )
-                return new_p, new_bs, loss
-
-            new_params, new_base, losses = jax.vmap(per_worker)(
-                params, base_state, microbatch
-            )
-            return (new_params, new_base, k + 1), losses.mean()
-
-        # scan over the tau microbatches: batch leaves (W, tau, ...) -> (tau, W, ...)
-        mb_scan = jax.tree.map(lambda x: jnp.swapaxes(x, 0, 1), batch)
-        (params_w, base_state_w, _), losses = jax.lax.scan(
-            one_local_step, (params_w, base_state_w, jnp.zeros((), jnp.int32)), mb_scan
-        )
-        return params_w, base_state_w, losses
+    local_phase = make_local_phase(
+        loss_fn, base_opt, accum=True,
+        device_parallel=cfg.device_parallel_local, mesh=mesh,
+    )
 
     def outer_step(state: DSMState, batch, rng: Optional[jax.Array] = None):
         gamma = schedule(state.t)
@@ -298,7 +381,7 @@ def make_dsm_step(
         # --- line 11: synchronize workers (the all-gather when sharded) ---
         n_workers = jax.tree.leaves(state.params)[0].shape[0]
         new_params = _broadcast_workers(new_x0, n_workers)
-        if cfg.zero_sharded and mesh is not None:
+        if mesh is not None:
             from repro.distributed import zero as Z
 
             new_params = Z.constrain_workers(new_params, mesh)
@@ -311,7 +394,10 @@ def make_dsm_step(
             t=state.t + 1,
             inner=state.inner + cfg.tau,
         )
-        metrics = {"loss": losses.mean(), "gamma": gamma, "last_loss": losses[-1]}
+        # losses is (tau, W): per-worker means happen HERE, outside the
+        # collective-free local phase
+        metrics = {"loss": losses.mean(), "gamma": gamma,
+                   "last_loss": losses[-1].mean()}
         return new_state, metrics
 
     return outer_step

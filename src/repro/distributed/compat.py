@@ -1,0 +1,18 @@
+"""Shims over jax API drift, so one source tree spans the CI version matrix.
+
+``shard_map`` graduated out of ``jax.experimental`` (it is ``jax.shard_map``
+on newer releases, ``jax.experimental.shard_map.shard_map`` on the minimum
+pinned version).  Import it from here everywhere; the CI fast job runs both
+ends of the supported range to catch the next such move before nightly does.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401  (min pin)
+
+__all__ = ["shard_map"]

@@ -42,8 +42,9 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.compat import shard_map
 
 from repro.distributed.sharding import param_pspecs
 from repro.kernels.dsm_update import LANES, dsm_update_2d
@@ -91,21 +92,28 @@ def constrain_workers(tree: PyTree, mesh: Mesh) -> PyTree:
     )
 
 
-def shard_dsm_state(state, mesh: Mesh):
-    """device_put a fresh DSMState into the ZeRO layout: x0 / m sharded over
-    (worker, zero); per-worker params / base state sharded over worker."""
+def shard_dsm_state(state, mesh: Mesh, global_sharded: bool = True):
+    """device_put a fresh DSMState onto the mesh: per-worker params / base
+    state sharded over worker; x0 / m in the ZeRO (worker, zero) layout when
+    ``global_sharded``, replicated otherwise (device-parallel local phase
+    with a replicated global step)."""
     ws = worker_sharding(mesh)
     rep = NamedSharding(mesh, P())
 
     def put_worker(x):
         return jax.device_put(x, ws if getattr(x, "ndim", 0) >= 1 else rep)
 
+    if global_sharded:
+        x0_sh = global_buffer_shardings(state.x0, mesh)
+        m_sh = global_buffer_shardings(state.m, mesh)
+    else:
+        x0_sh = jax.tree.map(lambda _: rep, state.x0)
+        m_sh = jax.tree.map(lambda _: rep, state.m)
+
     return type(state)(
         params=jax.tree.map(put_worker, state.params),
-        x0=jax.tree.map(jax.device_put, state.x0,
-                        global_buffer_shardings(state.x0, mesh)),
-        m=jax.tree.map(jax.device_put, state.m,
-                       global_buffer_shardings(state.m, mesh)),
+        x0=jax.tree.map(jax.device_put, state.x0, x0_sh),
+        m=jax.tree.map(jax.device_put, state.m, m_sh),
         base_state=jax.tree.map(put_worker, state.base_state),
         t=jax.device_put(state.t, rep),
         inner=jax.device_put(state.inner, rep),
@@ -118,7 +126,14 @@ def shard_dsm_state(state, mesh: Mesh):
 
 def _scattered_worker_mean(params_w, mesh):
     """x_tau = mean_i x^{(i)}_{t,tau}, reduced directly into the
-    (worker, zero) shard layout — the reduce-scatter of the outer step."""
+    (worker, zero) shard layout — the reduce-scatter of the outer step.
+
+    The per-worker iterates are pinned to their P("worker") layout first, so
+    when the local phase ran device-parallel the partitioner consumes the
+    already-worker-sharded x_tau in place (worker-axis reduction straight
+    into shards) instead of gathering the W copies to every rank and
+    re-scattering."""
+    params_w = constrain_workers(params_w, mesh)
     x_tau = jax.tree.map(lambda p: p.mean(axis=0), params_w)
     return constrain_global(x_tau, mesh)
 

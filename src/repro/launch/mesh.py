@@ -30,7 +30,12 @@ def training_mesh(base_mesh: Mesh, n_workers: int) -> Mesh:
     model = devices.shape[-1]
     rows = devices.reshape(-1, model)          # (pod*data, model)
     n_rows = rows.shape[0]
-    assert n_rows % n_workers == 0, (n_rows, n_workers)
+    if n_rows % n_workers != 0:
+        raise ValueError(
+            f"n_workers={n_workers} does not divide the {n_rows} model-parallel "
+            f"groups of the production mesh {tuple(devices.shape)}; pick a "
+            f"worker count from the divisors of {n_rows}"
+        )
     zero = n_rows // n_workers
     grid = rows.reshape(n_workers, zero, model)
     return Mesh(grid, ("worker", "zero", "model"))
@@ -39,17 +44,32 @@ def training_mesh(base_mesh: Mesh, n_workers: int) -> Mesh:
 def host_training_mesh(n_workers: int, model: int = 1) -> Mesh:
     """(worker, zero, model) mesh over the *local* devices.
 
-    Used by the trainer's ZeRO-sharded path (and the device-parallel tests
-    under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).  The
-    worker axis matches ``n_workers`` when the device count allows;
-    otherwise it degrades to worker=1 (pure zero sharding), so the same
-    code runs on a single CPU device.
+    The single code path for every mesh-consuming trainer feature
+    (``zero_sharded``, ``device_parallel_local``; also the device-parallel
+    tests under ``XLA_FLAGS=--xla_force_host_platform_device_count=N``).
+    The worker axis matches ``n_workers`` when the device grid allows; a
+    single-device host degrades to worker=1 (so the same code runs on one
+    CPU device), and any other mismatch is an error — silently replicating
+    workers on a multi-device grid would defeat the sharding it names.
     """
     devices = np.array(jax.devices())
     n = (len(devices) // model) * model
-    assert n >= 1, "no devices"
+    if n < 1:
+        raise ValueError(
+            f"host_training_mesh needs at least model={model} devices, "
+            f"have {len(devices)}"
+        )
     rows = n // model
-    worker = n_workers if rows % n_workers == 0 and rows >= n_workers else 1
+    if rows % n_workers == 0:
+        worker = n_workers
+    elif rows == 1:
+        worker = 1  # single-device degenerate mesh
+    else:
+        raise ValueError(
+            f"n_workers={n_workers} does not divide the host device grid "
+            f"({len(devices)} devices / model={model} -> {rows} rows); pick "
+            f"a worker count from the divisors of {rows}"
+        )
     zero = rows // worker
     grid = devices[: worker * zero * model].reshape(worker, zero, model)
     return Mesh(grid, ("worker", "zero", "model"))

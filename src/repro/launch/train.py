@@ -58,6 +58,10 @@ def main():
     ap.add_argument("--zero-sharded", action="store_true",
                     help="ZeRO-sharded global step over the local devices "
                          "(shard x0/m over worker*zero ranks)")
+    ap.add_argument("--device-parallel-local", action="store_true",
+                    help="run the tau local steps shard_mapped over the "
+                         "worker mesh axis (each device computes only its "
+                         "own worker; no inter-worker collectives)")
     ap.add_argument("--plan", action="store_true")
     args = ap.parse_args()
 
@@ -99,6 +103,7 @@ def main():
         b_micro=args.b_micro, peak_lr=args.peak_lr, global_lr=args.global_lr,
         eval_every=max(args.steps // 5, 1),
         use_kernel=args.use_kernel, zero_sharded=args.zero_sharded,
+        device_parallel_local=args.device_parallel_local,
     )
     corpus = MarkovCorpus(cfg.vocab_size, seed=1)
     result = run_training(cfg, s, corpus, log=print)

@@ -57,6 +57,7 @@ class TrainSettings:
     heterogeneous: bool = True
     use_kernel: bool = False
     zero_sharded: bool = False      # ZeRO-sharded global step over local devices
+    device_parallel_local: bool = False  # shard_map local phase over "worker"
 
 
 def _schedule(s: TrainSettings):
@@ -70,10 +71,13 @@ def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
     eval_params(state) -> params, comm_multiplier).
 
     ``mesh``: optional ("worker", "zero", "model") mesh; with
-    ``s.zero_sharded`` the DSM global step runs ZeRO-sharded on it.
+    ``s.zero_sharded`` the DSM global step runs ZeRO-sharded on it, and with
+    ``s.device_parallel_local`` the local phase of DSM / the local-step
+    baselines runs shard_mapped over its worker axis.
     """
     base = get_base_optimizer(s.base_opt)
     sched = _schedule(s)
+    local_kw = dict(device_parallel=s.device_parallel_local, mesh=mesh)
 
     if s.algorithm in ("dsm", "signed_lookahead"):
         cfg = DSMConfig(
@@ -81,6 +85,7 @@ def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
             beta2=s.dsm_beta2, weight_decay=s.dsm_wd, sign_mode=s.sign_mode,
             sign_bound=float(s.tau), use_kernel=s.use_kernel,
             zero_sharded=s.zero_sharded,
+            device_parallel_local=s.device_parallel_local,
         )
         if s.algorithm == "signed_lookahead":
             cfg = dataclasses.replace(cfg, beta1=s.slow_beta, beta2=s.slow_beta,
@@ -89,7 +94,8 @@ def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
         needs_rng = s.sign_mode != "sign"
 
         def init(params, n_workers):
-            return dsm_init(params, base, n_workers, mesh=mesh)
+            return dsm_init(params, base, n_workers, mesh=mesh,
+                            global_sharded=s.zero_sharded)
 
         def stepper(state, batch, rng):
             return step(state, batch, rng) if needs_rng else step(state, batch)
@@ -100,14 +106,18 @@ def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
                        "local_avg"):
         maker = {
             "slowmo": lambda: BL.slowmo(loss_fn, base, s.tau, sched,
-                                        beta=s.slow_beta, alpha=s.global_lr),
+                                        beta=s.slow_beta, alpha=s.global_lr,
+                                        **local_kw),
             "signed_slowmo": lambda: BL.signed_slowmo(loss_fn, base, s.tau, sched,
-                                                      beta=s.slow_beta, eta=s.global_lr),
+                                                      beta=s.slow_beta, eta=s.global_lr,
+                                                      **local_kw),
             "lookahead": lambda: BL.lookahead(loss_fn, base, s.tau, sched,
-                                              beta=s.slow_beta, eta=s.global_lr),
+                                              beta=s.slow_beta, eta=s.global_lr,
+                                              **local_kw),
             "global_adamw": lambda: BL.global_adamw(loss_fn, base, s.tau, sched,
-                                                    eta=s.global_lr),
-            "local_avg": lambda: BL.local_avg(loss_fn, base, s.tau, sched),
+                                                    eta=s.global_lr, **local_kw),
+            "local_avg": lambda: BL.local_avg(loss_fn, base, s.tau, sched,
+                                              **local_kw),
         }[s.algorithm]
         init, step = maker()
         return init, (lambda st, b, rng: step(st, b)), (lambda st: st.x0), 1.0
@@ -135,8 +145,12 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
     def loss_fn(p, mb):
         return T.loss_fn(p, mb, cfg, remat=False)
 
+    # ONE mesh construction for every mesh-consuming feature: zero_sharded,
+    # device_parallel_local, and whatever comes next all share this path
+    # (host_training_mesh raises a clear error when n_workers does not
+    # divide the device grid).
     mesh = None
-    if s.zero_sharded:
+    if s.zero_sharded or s.device_parallel_local:
         from repro.launch.mesh import host_training_mesh
 
         mesh = host_training_mesh(s.n_workers)

@@ -147,7 +147,7 @@ print("RESULT " + json.dumps(rec))
 """
 
 
-@pytest.mark.slow
+@pytest.mark.multidevice
 def test_sharded_training_matches_replicated_8dev():
     """zero_sharded=True == replicated to 1e-5 after 5 outer steps, on a
     forced 8-device host (worker=4, zero=2), jnp and fused-kernel paths."""
