@@ -21,7 +21,8 @@ LOCAL_STEP_ALGOS = ("dsm", "slowmo", "signed_slowmo", "lookahead",
 def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
                          param_bytes: int = 2, zero_sharded: bool = False,
                          shards: int = 1, device_parallel: bool = False,
-                         n_workers: int = 8) -> dict:
+                         n_workers: int = 8,
+                         survivor_frac: float = 1.0) -> dict:
     """Inter-worker (slow-network) bytes per tau local steps, per the
     all-reduce ~ 2x payload ring model.  Intra-worker TP traffic excluded
     (that is the fast-network budget).
@@ -38,7 +39,15 @@ def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
     share per rank (wire bytes unchanged — the local phase is collective-free
     either way).  ``local_step_flops_replication`` is the per-rank local
     compute multiplier the layout implies.
+
+    ``survivor_frac``: expected fraction of worker contributions that arrive
+    each round under dropout (``1 - FaultPlan.dropped_frac()``).  A dropped
+    worker sources nothing into the round's reduction, so the *expected*
+    fabric traffic scales with the survivor fraction while the per-survivor
+    bytes (and round count — the all-reduce still happens) do not.
     """
+    if not 0.0 <= survivor_frac <= 1.0:
+        raise ValueError(f"survivor_frac={survivor_frac} must lie in [0, 1]")
     cfg = load_arch(arch_id).FULL
     n = S.param_count(cfg)
     payload = n * param_bytes
@@ -59,6 +68,8 @@ def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
         "wire_bytes_per_outer": wire,
         "comm_rounds_per_outer": rounds,
         "reduction_vs_perstep": (2 * payload * tau) / max(wire, 1),
+        "survivor_frac": survivor_frac,
+        "expected_wire_bytes_per_outer": int(round(wire * survivor_frac)),
     }
     if algo in LOCAL_STEP_ALGOS:
         out["local_phase_device_parallel"] = device_parallel

@@ -86,6 +86,7 @@ class DSMConfig:
     zero_sharded: bool = False    # beyond-paper: ZeRO-style sharded global step
     use_kernel: bool = False      # fused Pallas kernel for the global step
     device_parallel_local: bool = False  # shard_map the local phase over "worker"
+    mask_nonfinite: bool = False  # survivor-aware mean masks NaN/inf workers
 
     def __post_init__(self):
         if self.sign_mode not in SIGN_MODES:
@@ -109,6 +110,54 @@ def _broadcast_workers(x0: PyTree, n_workers: int) -> PyTree:
     return jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (n_workers,) + x.shape), x0
     )
+
+
+# ---------------------------------------------------------------------------
+# Survivor-aware aggregation (robustness layer; see docs/fault_tolerance.md).
+# Line 7's worker mean becomes a mask-weighted mean: dropped workers are
+# excluded by the caller-supplied survivor mask, NaN/inf-corrupted
+# contributions are detected on device and masked, and a round with zero
+# usable contributions leaves x0 / m bit-untouched (skip-round semantics).
+# Everything is elementwise in W, so the same code runs vmapped, under the
+# shard_map local phase, and inside the ZeRO-sharded global step.
+# ---------------------------------------------------------------------------
+
+def worker_finite_mask(params_w: PyTree) -> jnp.ndarray:
+    """``(W,)`` bool: worker i's contribution is finite in EVERY leaf."""
+    leaves = [l for l in jax.tree.leaves(params_w)
+              if jnp.issubdtype(l.dtype, jnp.floating)]
+    n_workers = jax.tree.leaves(params_w)[0].shape[0]
+    ok = jnp.ones((n_workers,), bool)
+    for l in leaves:
+        ok = ok & jnp.isfinite(l).reshape(l.shape[0], -1).all(axis=1)
+    return ok
+
+
+def masked_worker_mean(params_w: PyTree, weights: jnp.ndarray) -> PyTree:
+    """Weighted worker mean; zero-weight workers are fully zeroed BEFORE the
+    sum so their NaNs cannot propagate (NaN * 0 == NaN).  An all-zero weight
+    vector yields 0 (the caller must apply skip-round semantics)."""
+    wsum = jnp.maximum(weights.astype(jnp.float32).sum(), 1.0)
+
+    def leaf(p):
+        w = weights.astype(p.dtype).reshape((p.shape[0],) + (1,) * (p.ndim - 1))
+        contrib = jnp.where(w > 0, p, jnp.zeros((), p.dtype))
+        return (w * contrib).sum(axis=0) / wsum.astype(p.dtype)
+
+    return jax.tree.map(leaf, params_w)
+
+
+def _contribution_weights(contrib: PyTree, cfg: "DSMConfig",
+                          faults) -> Optional[jnp.ndarray]:
+    """(W,) f32 weights combining the announced survivor mask (dropouts)
+    with on-device finiteness detection, or None for the dense fast path."""
+    weights = None
+    if faults is not None:
+        weights = faults.survivors.astype(jnp.float32)
+    if cfg.mask_nonfinite or faults is not None:
+        finite = worker_finite_mask(contrib).astype(jnp.float32)
+        weights = finite if weights is None else weights * finite
+    return weights
 
 
 def dsm_init(
@@ -347,6 +396,14 @@ def make_dsm_step(
     worker broadcast.  With ``cfg.device_parallel_local`` the tau local steps
     run under shard_map with every per-worker buffer sharded over the mesh's
     worker axis — genuinely data-parallel, zero inter-worker collectives.
+
+    ``faults`` (optional ``repro.robustness.faults.FaultRound``) makes the
+    round survivor-aware: announced dropouts are excluded from the x_tau
+    mean, straggler/corrupt contributions are injected, and non-finite
+    contributions are detected and masked on device.  A round with no
+    usable contribution leaves x0 / m bit-untouched (workers still re-sync
+    from the unchanged x0).  ``cfg.mask_nonfinite`` enables the detection
+    path without injection (real-run protection).
     """
 
     local_phase = make_local_phase(
@@ -354,12 +411,22 @@ def make_dsm_step(
         device_parallel=cfg.device_parallel_local, mesh=mesh,
     )
 
-    def outer_step(state: DSMState, batch, rng: Optional[jax.Array] = None):
+    def outer_step(state: DSMState, batch, rng: Optional[jax.Array] = None,
+                   faults=None):
         gamma = schedule(state.t)
 
         params_w, base_state_w, losses = local_phase(
             state.params, state.base_state, batch, gamma, state.inner
         )
+
+        # --- fault injection + survivor weights (None -> dense fast path,
+        # identical to the pre-robustness step) ---
+        contrib = params_w
+        if faults is not None:
+            from repro.robustness.faults import apply_faults
+
+            contrib = apply_faults(params_w, state.x0, faults)
+        weights = _contribution_weights(contrib, cfg, faults)
 
         if cfg.zero_sharded and mesh is not None:
             # --- lines 7-10, ZeRO-sharded: reduce-scatter(x_tau) ->
@@ -367,16 +434,28 @@ def make_dsm_step(
             from repro.distributed import zero as Z
 
             new_x0, new_m = Z.sharded_global_sign_momentum_step(
-                state.x0, state.m, params_w, gamma, cfg, mesh, rng
+                state.x0, state.m, contrib, gamma, cfg, mesh, rng,
+                weights=weights,
             )
         else:
             # --- line 7: THE all-reduce over workers (once per tau local steps) ---
-            x_tau_mean = jax.tree.map(lambda p: p.mean(axis=0), params_w)
+            if weights is None:
+                x_tau_mean = jax.tree.map(lambda p: p.mean(axis=0), contrib)
+            else:
+                x_tau_mean = masked_worker_mean(contrib, weights)
 
             # --- lines 8-10: global sign momentum ---
             new_x0, new_m = global_sign_momentum_step(
                 state.x0, state.m, x_tau_mean, gamma, cfg, rng
             )
+
+        if weights is not None:
+            # skip-round: zero usable contributions -> x0 / m bit-untouched
+            ok = weights.sum() > 0
+            new_x0 = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                  new_x0, state.x0)
+            new_m = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                 new_m, state.m)
 
         # --- line 11: synchronize workers (the all-gather when sharded) ---
         n_workers = jax.tree.leaves(state.params)[0].shape[0]
@@ -398,6 +477,8 @@ def make_dsm_step(
         # collective-free local phase
         metrics = {"loss": losses.mean(), "gamma": gamma,
                    "last_loss": losses[-1].mean()}
+        if weights is not None:
+            metrics["survivors"] = weights.sum()
         return new_state, metrics
 
     return outer_step

@@ -124,7 +124,7 @@ def shard_dsm_state(state, mesh: Mesh, global_sharded: bool = True):
 # jnp / GSPMD path
 # ---------------------------------------------------------------------------
 
-def _scattered_worker_mean(params_w, mesh):
+def _scattered_worker_mean(params_w, mesh, weights=None):
     """x_tau = mean_i x^{(i)}_{t,tau}, reduced directly into the
     (worker, zero) shard layout — the reduce-scatter of the outer step.
 
@@ -132,16 +132,25 @@ def _scattered_worker_mean(params_w, mesh):
     when the local phase ran device-parallel the partitioner consumes the
     already-worker-sharded x_tau in place (worker-axis reduction straight
     into shards) instead of gathering the W copies to every rank and
-    re-scattering."""
+    re-scattering.
+
+    ``weights`` (optional ``(W,)`` f32): survivor-aware masked mean — zero-
+    weight (dropped / non-finite) workers are zeroed before the reduction,
+    still elementwise in W, so the reduce-scatter structure is unchanged."""
     params_w = constrain_workers(params_w, mesh)
-    x_tau = jax.tree.map(lambda p: p.mean(axis=0), params_w)
+    if weights is None:
+        x_tau = jax.tree.map(lambda p: p.mean(axis=0), params_w)
+    else:
+        from repro.core.dsm import masked_worker_mean
+
+        x_tau = masked_worker_mean(params_w, weights)
     return constrain_global(x_tau, mesh)
 
 
-def _sharded_step_jnp(x0, m, params_w, gamma, cfg, mesh, rng):
+def _sharded_step_jnp(x0, m, params_w, gamma, cfg, mesh, rng, weights=None):
     from repro.core.dsm import global_sign_momentum_step
 
-    x_tau = _scattered_worker_mean(params_w, mesh)
+    x_tau = _scattered_worker_mean(params_w, mesh, weights)
     # force the jnp path: the elementwise update stays shard-local under the
     # output constraint (the kernel dispatch is handled by the slab path)
     jnp_cfg = dataclasses.replace(cfg, use_kernel=False)
@@ -186,14 +195,14 @@ def dsm_update_shard(x0_l, m_l, xt_l, gamma, *, eta, beta1, beta2, lam,
 
 
 def _sharded_step_kernel(x0, m, params_w, gamma, cfg, mesh,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None, weights=None):
     from repro.kernels.ops import _default_interpret
 
     interpret = _default_interpret() if interpret is None else interpret
     R = num_shards(mesh)
     gamma32 = jnp.asarray(gamma, jnp.float32)
 
-    x_tau = _scattered_worker_mean(params_w, mesh)
+    x_tau = _scattered_worker_mean(params_w, mesh, weights)
 
     x0_leaves, treedef = jax.tree.flatten(x0)
     m_leaves = jax.tree.leaves(m)
@@ -246,15 +255,21 @@ def sharded_global_sign_momentum_step(
     cfg,
     mesh: Mesh,
     rng: Optional[jax.Array] = None,
+    weights: Optional[jnp.ndarray] = None,
 ) -> tuple[PyTree, PyTree]:
     """ZeRO-sharded eqs. (6)-(8): consumes per-worker iterates directly
     (the reduce-scatter subsumes the worker mean). Returns sharded
     (x_{t+1,0}, m_{t+1}); the caller's worker broadcast is the all-gather.
+
+    ``weights``: optional ``(W,)`` survivor weights for the fault-tolerant
+    masked mean (repro.core.dsm.masked_worker_mean); the caller applies
+    skip-round semantics when all weights are zero.
 
     The fused-kernel slab path supports the deterministic sign only; the
     randomized-sign modes (theory §3.1) use the jnp/GSPMD path, whose
     sampled bits are layout-independent, so sharded == replicated there too.
     """
     if cfg.use_kernel and cfg.sign_mode == "sign":
-        return _sharded_step_kernel(x0, m, params_w, gamma, cfg, mesh)
-    return _sharded_step_jnp(x0, m, params_w, gamma, cfg, mesh, rng)
+        return _sharded_step_kernel(x0, m, params_w, gamma, cfg, mesh,
+                                    weights=weights)
+    return _sharded_step_jnp(x0, m, params_w, gamma, cfg, mesh, rng, weights)

@@ -62,6 +62,25 @@ def main():
                     help="run the tau local steps shard_mapped over the "
                          "worker mesh axis (each device computes only its "
                          "own worker; no inter-worker collectives)")
+    # --- robustness (docs/fault_tolerance.md) ---
+    ap.add_argument("--faults", default=None,
+                    help="seeded fault-injection spec, e.g. "
+                         "'drop=0.25,straggle=0.1,nan=0.05,seed=0'")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="atomic rotated checkpoints of the full training "
+                         "state land here")
+    ap.add_argument("--checkpoint-every", type=int, default=0,
+                    help="outer steps between checkpoints "
+                         "(default: steps // 5)")
+    ap.add_argument("--resume", action="store_true",
+                    help="auto-resume bit-exactly from the latest complete "
+                         "checkpoint in --checkpoint-dir")
+    ap.add_argument("--guard-spike-factor", type=float, default=0.0,
+                    help="skip rounds whose loss exceeds this factor times "
+                         "the accepted-loss EMA (0 disables)")
+    ap.add_argument("--guard-nonfinite", action="store_true",
+                    help="skip rounds that produce NaN/inf anywhere in the "
+                         "training state")
     ap.add_argument("--plan", action="store_true")
     args = ap.parse_args()
 
@@ -104,11 +123,19 @@ def main():
         eval_every=max(args.steps // 5, 1),
         use_kernel=args.use_kernel, zero_sharded=args.zero_sharded,
         device_parallel_local=args.device_parallel_local,
+        faults=args.faults,
+        guard_nonfinite=args.guard_nonfinite,
+        guard_spike_factor=args.guard_spike_factor,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume,
     )
     corpus = MarkovCorpus(cfg.vocab_size, seed=1)
     result = run_training(cfg, s, corpus, log=print)
     print(f"final eval loss: {result['final_eval']:.4f} "
-          f"(comm rounds: {result['comm_rounds']}, tokens: {result['tokens']})")
+          f"(comm rounds: {result['comm_rounds']}, tokens: {result['tokens']}, "
+          f"skipped rounds: {result['skipped_rounds']}, "
+          f"rollbacks: {result['rollbacks']})")
 
     if args.checkpoint:
         from repro.checkpoint import checkpoint as CK

@@ -1,0 +1,44 @@
+"""Fault tolerance for DSM training (beyond-paper robustness layer).
+
+The paper targets regimes "where communicating at every step is
+prohibitive" — multi-host, preemptible fleets where workers straggle, drop
+out, and deliver corrupted contributions.  This package provides:
+
+  * ``faults``  — a deterministic, seeded fault-injection plan
+    (:class:`FaultPlan`) producing per-round worker dropouts, stale
+    (straggler) contributions, and NaN/inf corruption, consumable by the
+    trainer, the launcher (``--faults``), and the chaos tests.
+  * ``guards``  — device-side training guards: non-finite-update and
+    loss-spike detection with skip-round semantics (the sign momentum ``m``
+    is untouched on a skipped round).
+
+The survivor-aware global step itself lives in ``repro.core.dsm``
+(:func:`masked_worker_mean`) so the algorithm is robust without importing
+this package; see docs/fault_tolerance.md for the full fault model.
+"""
+
+from repro.robustness.faults import (
+    FaultPlan,
+    FaultRound,
+    FaultSpec,
+    apply_faults,
+)
+from repro.robustness.guards import (
+    GuardState,
+    init_guard,
+    make_guarded_step,
+    tree_all_finite,
+    tree_select,
+)
+
+__all__ = [
+    "FaultPlan",
+    "FaultRound",
+    "FaultSpec",
+    "apply_faults",
+    "GuardState",
+    "init_guard",
+    "make_guarded_step",
+    "tree_all_finite",
+    "tree_select",
+]

@@ -1,0 +1,104 @@
+"""Training guards: skip-round protection around any outer step.
+
+``make_guarded_step`` wraps an outer step ``f(state, *args) -> (state',
+metrics)`` with device-side acceptance checks:
+
+  * **non-finite update** — any NaN/inf anywhere in the candidate state
+    (x0, momentum, per-worker params, base-opt state) rejects the round;
+  * **loss spike** — round loss above ``spike_factor`` x a running EMA of
+    accepted-round losses rejects the round (momentum hygiene: one poisoned
+    pseudo-gradient would otherwise linger in ``m`` for ~1/(1-beta2)
+    rounds, the failure mode decoupled-momentum methods like DeMo design
+    around).
+
+A rejected round is *skipped*: the previous state — including the sign
+momentum ``m`` and the outer counter ``t`` — is kept bit-intact and the
+trainer moves on to the next batch (retry-with-fresh-data).  Everything is
+computed with ``jnp.where`` selects, so the guarded step stays a single
+jittable function with no host sync; the trainer only reads
+``guard.bad_streak`` (one scalar) when checkpoint rollback is enabled.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class GuardState(NamedTuple):
+    ema: jnp.ndarray         # f32 EMA of accepted-round losses
+    seen: jnp.ndarray        # i32 accepted rounds (0 -> EMA uninitialized)
+    bad_streak: jnp.ndarray  # i32 consecutive rejected rounds
+    skipped: jnp.ndarray     # i32 total rejected rounds
+
+
+def init_guard() -> GuardState:
+    return GuardState(
+        ema=jnp.zeros((), jnp.float32),
+        seen=jnp.zeros((), jnp.int32),
+        bad_streak=jnp.zeros((), jnp.int32),
+        skipped=jnp.zeros((), jnp.int32),
+    )
+
+
+def tree_all_finite(tree: PyTree) -> jnp.ndarray:
+    """Scalar bool: every element of every floating leaf is finite."""
+    ok = jnp.asarray(True)
+    for leaf in jax.tree.leaves(tree):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating):
+            ok = ok & jnp.isfinite(leaf).all()
+    return ok
+
+
+def tree_select(pred: jnp.ndarray, on_true: PyTree, on_false: PyTree) -> PyTree:
+    """Leafwise ``where(pred, on_true, on_false)`` (scalar pred)."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
+def make_guarded_step(
+    step_fn: Callable[..., tuple[PyTree, dict]],
+    *,
+    nonfinite: bool = True,
+    spike_factor: float = 0.0,
+    ema_beta: float = 0.9,
+) -> Callable[..., tuple[PyTree, GuardState, dict]]:
+    """Wrap ``step_fn(state, *args)`` into
+    ``guarded(state, guard, *args) -> (state', guard', metrics)``.
+
+    ``spike_factor <= 0`` disables spike detection; ``nonfinite=False``
+    disables the full-state finiteness check (a non-finite loss always
+    rejects).  The first accepted round seeds the EMA with its loss.
+    """
+    if spike_factor < 0:
+        raise ValueError("spike_factor must be >= 0 (0 disables)")
+
+    def guarded(state, guard: GuardState, *args):
+        new_state, metrics = step_fn(state, *args)
+        loss = jnp.asarray(metrics["loss"], jnp.float32)
+        ok = jnp.isfinite(loss)
+        if nonfinite:
+            ok = ok & tree_all_finite(new_state)
+        if spike_factor > 0:
+            spike = (guard.seen > 0) & (loss > spike_factor * guard.ema)
+            ok = ok & ~spike
+
+        ema_next = jnp.where(
+            guard.seen == 0, loss,
+            ema_beta * guard.ema + (1.0 - ema_beta) * loss,
+        )
+        new_guard = GuardState(
+            ema=jnp.where(ok, ema_next, guard.ema),
+            seen=guard.seen + ok.astype(jnp.int32),
+            bad_streak=jnp.where(ok, 0, guard.bad_streak + 1),
+            skipped=guard.skipped + (~ok).astype(jnp.int32),
+        )
+        out_state = tree_select(ok, new_state, state)
+        metrics = dict(metrics, guard_ok=ok, bad_streak=new_guard.bad_streak,
+                       skipped_rounds=new_guard.skipped)
+        return out_state, new_guard, metrics
+
+    return guarded

@@ -58,6 +58,19 @@ class TrainSettings:
     use_kernel: bool = False
     zero_sharded: bool = False      # ZeRO-sharded global step over local devices
     device_parallel_local: bool = False  # shard_map local phase over "worker"
+    # --- robustness (docs/fault_tolerance.md) ---
+    faults: Any = None              # FaultPlan | FaultSpec | spec str, e.g.
+    #                                 "drop=0.25,straggle=0.1,nan=0.05,seed=0"
+    mask_nonfinite: bool = False    # survivor-aware mean w/o injection (DSM)
+    guard_nonfinite: bool = False   # reject rounds with NaN/inf in the state
+    guard_spike_factor: float = 0.0  # reject rounds w/ loss > factor*EMA (0=off)
+    guard_ema_beta: float = 0.9     # loss EMA for spike detection
+    guard_patience: int = 5         # K consecutive bad rounds -> rollback
+    guard_max_rollbacks: int = 2    # bounded retry; exceeded -> RuntimeError
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0       # outer steps; <=0 -> max(1, steps // 5)
+    checkpoint_keep: int = 3        # rotated retention
+    resume: bool = False            # auto-resume from checkpoint_dir's latest
 
 
 def _schedule(s: TrainSettings):
@@ -86,6 +99,7 @@ def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
             sign_bound=float(s.tau), use_kernel=s.use_kernel,
             zero_sharded=s.zero_sharded,
             device_parallel_local=s.device_parallel_local,
+            mask_nonfinite=s.mask_nonfinite,
         )
         if s.algorithm == "signed_lookahead":
             cfg = dataclasses.replace(cfg, beta1=s.slow_beta, beta2=s.slow_beta,
@@ -97,8 +111,8 @@ def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
             return dsm_init(params, base, n_workers, mesh=mesh,
                             global_sharded=s.zero_sharded)
 
-        def stepper(state, batch, rng):
-            return step(state, batch, rng) if needs_rng else step(state, batch)
+        def stepper(state, batch, rng, faults=None):
+            return step(state, batch, rng if needs_rng else None, faults)
 
         return init, stepper, lambda st: st.x0, 1.0
 
@@ -120,24 +134,57 @@ def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
                                               **local_kw),
         }[s.algorithm]
         init, step = maker()
-        return init, (lambda st, b, rng: step(st, b)), (lambda st: st.x0), 1.0
+        return init, (lambda st, b, rng, faults=None: step(st, b)), (lambda st: st.x0), 1.0
 
     if s.algorithm == "perstep":
         init, step = BL.make_perstep_dp_step(loss_fn, base, s.tau, sched)
-        return init, (lambda st, b, rng: step(st, b)), (lambda st: st.params), float(s.tau)
+        return init, (lambda st, b, rng, faults=None: step(st, b)), (lambda st: st.params), float(s.tau)
 
     if s.algorithm == "mv_signsgd":
         init, step = BL.make_mv_signsgd_step(
             loss_fn, s.tau, gamma=s.peak_lr, eta=s.global_lr * s.peak_lr,
             beta=s.slow_beta, bound=1.0,
         )
-        return init, (lambda st, b, rng: step(st, b, rng)), (lambda st: st.x), 1.0
+        return init, (lambda st, b, rng, faults=None: step(st, b, rng)), (lambda st: st.x), 1.0
 
     raise ValueError(f"unknown algorithm {s.algorithm!r}")
 
 
+_DSM_FAMILY = ("dsm", "signed_lookahead")
+
+
+def _resolve_fault_plan(s: TrainSettings):
+    if not s.faults:
+        return None
+    from repro.robustness.faults import FaultPlan
+
+    if s.algorithm not in _DSM_FAMILY:
+        raise ValueError(
+            "fault injection needs the survivor-aware DSM step family; "
+            f"got algorithm={s.algorithm!r}")
+    if isinstance(s.faults, FaultPlan):
+        return s.faults
+    return FaultPlan.from_spec(s.faults, s.n_workers, s.steps)
+
+
 def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = None):
-    """Train; returns dict(history, eval_losses, final_eval, tokens, comm_rounds)."""
+    """Train; returns dict(history, eval_losses, final_eval, tokens, comm_rounds).
+
+    Robustness settings (docs/fault_tolerance.md):
+
+      * ``faults``          — deterministic seeded fault injection (DSM only).
+      * ``guard_nonfinite`` / ``guard_spike_factor`` — skip-round guards; with
+        ``checkpoint_dir`` set, ``guard_patience`` consecutive bad rounds roll
+        the run back to the last checkpoint, at most ``guard_max_rollbacks``
+        times before raising RuntimeError.
+      * ``checkpoint_dir`` / ``checkpoint_every`` / ``resume`` — atomic rotated
+        checkpoints of the FULL training state (optimizer state, PRNG key,
+        guard state, metric history, data position via the step index), so a
+        killed run restarts bit-exactly from the last complete checkpoint.
+
+    Per-round metrics stay on device (async) and are only fetched at
+    eval/log/checkpoint points; ``history`` contents are unchanged.
+    """
     corpus = corpus or MarkovCorpus(cfg.vocab_size, seed=1)
     key = jax.random.PRNGKey(s.seed)
     params = T.init_params(key, cfg)
@@ -157,32 +204,126 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
 
     init, step, eval_params, comm_mult = build_algorithm(loss_fn, s, mesh=mesh)
     state = init(params, s.n_workers)
-    jstep = jax.jit(step)
+
+    plan = _resolve_fault_plan(s)
+    guards_on = s.guard_nonfinite or s.guard_spike_factor > 0
+    if guards_on:
+        from repro.robustness import guards as G
+
+        guard = G.init_guard()
+        jstep = jax.jit(G.make_guarded_step(
+            step, nonfinite=s.guard_nonfinite,
+            spike_factor=s.guard_spike_factor, ema_beta=s.guard_ema_beta))
+    else:
+        guard = None
+        jstep = jax.jit(step)
     eval_loss_fn = jax.jit(lambda p, b: T.loss_fn(p, b, cfg, remat=False))
 
-    batches = dsm_batches(
-        corpus, s.n_workers, s.tau, 1, s.b_micro, s.seq,
-        seed=s.seed, heterogeneous=s.heterogeneous,
-    )
-    ev_batch = eval_batch(corpus, s.eval_batch, s.seq)
-    needs_accum = s.algorithm in ("dsm", "signed_lookahead")
+    ckpt_on = bool(s.checkpoint_dir)
+    ckpt_every = s.checkpoint_every if s.checkpoint_every > 0 else max(1, s.steps // 5)
+    rollback_on = ckpt_on and guards_on and s.guard_patience > 0
+    if ckpt_on:
+        from repro.checkpoint import checkpoint as CK
+
+    def ckpt_tree(state, guard, key):
+        tree = {"state": state, "key": key}
+        if guard is not None:
+            tree["guard"] = guard
+        return tree
+
+    def reshard(state):
+        # npz restore lands on the default device; put DSM state back into
+        # its mesh layout so the compiled step consumes it shard-in-place
+        if mesh is not None and s.algorithm in _DSM_FAMILY:
+            from repro.distributed import zero as Z
+
+            return Z.shard_dsm_state(state, mesh, global_sharded=s.zero_sharded)
+        return state
+
+    def make_batches(skip: int = 0):
+        # data-pipeline position == outer-step index: the stream is a pure
+        # function of (corpus, seed), so resume replays `skip` rounds
+        it = dsm_batches(
+            corpus, s.n_workers, s.tau, 1, s.b_micro, s.seq,
+            seed=s.seed, heterogeneous=s.heterogeneous,
+        )
+        for _ in range(skip):
+            next(it)
+        return it
 
     history, evals = [], []
+    start_step, rollbacks = 0, 0
+    if s.resume and ckpt_on:
+        restored = CK.restore_latest(s.checkpoint_dir, ckpt_tree(state, guard, key))
+        if restored is not None:
+            tree, start_step, extra = restored
+            state, key = reshard(tree["state"]), tree["key"]
+            if guards_on:
+                guard = tree["guard"]
+            history = [float(x) for x in extra.get("history", [])]
+            evals = [tuple(e) for e in extra.get("evals", [])]
+            if log:
+                log(f"resumed from checkpoint at step {start_step}")
+    if ckpt_on and start_step == 0:
+        # step-0 checkpoint: the rollback target always exists
+        CK.save_checkpoint(s.checkpoint_dir, ckpt_tree(state, guard, key), 0,
+                           keep=s.checkpoint_keep,
+                           extra={"history": [], "evals": []})
+
+    ev_batch = eval_batch(corpus, s.eval_batch, s.seq)
+    needs_accum = s.algorithm in _DSM_FAMILY
+
+    batches = make_batches(start_step)
+    t = start_step
     t0 = time.time()
-    for t in range(s.steps):
+    while t < s.steps:
         key, sub = jax.random.split(key)
         batch = next(batches)
         if not needs_accum:
             batch = {k: v[:, :, 0] for k, v in batch.items()}
         batch = jax.tree.map(jnp.asarray, batch)
-        state, metrics = jstep(state, batch, sub)
-        history.append(float(metrics["loss"]))
-        if (t + 1) % s.eval_every == 0 or t == s.steps - 1:
-            el = float(eval_loss_fn(eval_params(state), ev_batch))
-            evals.append((t + 1, el))
-            if log:
-                log(f"step {t+1:4d} train={history[-1]:.4f} eval={el:.4f}")
+        fr = plan.round(t) if plan is not None else None
+        if guards_on:
+            state, guard, metrics = jstep(state, guard, batch, sub, fr)
+        else:
+            state, metrics = jstep(state, batch, sub, fr)
+        # device scalar: fetched only at eval/log/checkpoint points (the
+        # old float() here blocked on the device every outer step)
+        history.append(metrics["loss"])
 
+        if rollback_on and int(guard.bad_streak) >= s.guard_patience:
+            # the ONE per-round host read rollback requires (a scalar i32)
+            if rollbacks >= s.guard_max_rollbacks:
+                raise RuntimeError(
+                    f"training diverged: {int(guard.bad_streak)} consecutive "
+                    f"bad rounds at step {t} after {rollbacks} rollbacks")
+            rollbacks += 1
+            tree, t_ck, extra = CK.restore_latest(
+                s.checkpoint_dir, ckpt_tree(state, guard, key))
+            state, key = reshard(tree["state"]), tree["key"]
+            guard = tree["guard"]._replace(bad_streak=jnp.zeros((), jnp.int32))
+            history = [float(x) for x in extra.get("history", [])]
+            evals = [tuple(e) for e in extra.get("evals", [])]
+            if log:
+                log(f"rollback #{rollbacks}: step {t} -> checkpoint at {t_ck}")
+            batches = make_batches(t_ck)
+            t = t_ck
+            continue
+
+        t += 1
+        if t % s.eval_every == 0 or t == s.steps:
+            el = float(eval_loss_fn(eval_params(state), ev_batch))
+            evals.append((t, el))
+            if log:
+                log(f"step {t:4d} train={float(history[-1]):.4f} eval={el:.4f}")
+        if ckpt_on and t % ckpt_every == 0:
+            history = [float(x) for x in history]  # checkpoint = a sync point
+            CK.save_checkpoint(
+                s.checkpoint_dir, ckpt_tree(state, guard, key), t,
+                keep=s.checkpoint_keep,
+                extra={"history": history, "evals": [list(e) for e in evals]})
+
+    history = [float(x) for x in history]
     return {
         "history": history,
         "eval_losses": evals,
@@ -190,5 +331,7 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
         "tokens": s.steps * s.tau * s.n_workers * s.b_micro * s.seq,
         "comm_rounds": int(s.steps * comm_mult),
         "wall_s": time.time() - t0,
+        "skipped_rounds": int(guard.skipped) if guards_on else 0,
+        "rollbacks": rollbacks,
         "state": state,
     }
