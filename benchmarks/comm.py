@@ -2,6 +2,12 @@
 
 Analytic bytes-per-outer-step for every algorithm, cross-checked against
 the dry-run's HLO collective parse for DSM (benchmarks/run.py prints both).
+
+``phase_collective_budget`` turns the same model into the machine-checked
+per-phase budgets consumed by the static auditor
+(``repro.analysis.hlo_audit``): the analytic round counts here are LOGICAL
+rounds; the auditor multiplies them out to per-leaf HLO op ceilings and
+payload-byte ceilings and checks the compiled program against them.
 """
 
 from __future__ import annotations
@@ -88,3 +94,61 @@ def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
         # ranks all recompute the full update; sharded ranks own 1/R of it)
         out["broadcast_src_bytes_per_rank"] = payload // r
     return out
+
+
+# ---------------------------------------------------------------------------
+# Collective budgets for the static auditor (repro.analysis.hlo_audit)
+# ---------------------------------------------------------------------------
+
+# A logical worker reduction may lower as `reduce-scatter` (collective-capable
+# backends) or as `all-reduce` + local slice (the CPU partitioner's choice for
+# the GSPMD scattered mean — see docs/sharding.md); both implement the same
+# single round of the ring model above, so the budget treats them as one
+# equivalence class.  Ops outside the declared classes (all-to-all,
+# collective-permute, ...) are never part of Algorithm 1's outer step and any
+# occurrence is a budget violation.
+REDUCE_CLASS = ("all-reduce", "reduce-scatter")
+GATHER_CLASS = ("all-gather",)
+
+PHASES = ("local", "global_dense", "global_zero")
+
+
+def phase_collective_budget(phase: str, *, n_param_leaves: int,
+                            payload_bytes: int,
+                            n_metric_reductions: int = 2,
+                            payload_slack: float = 1.5) -> dict:
+    """LOGICAL per-phase budget, derived from the round model above.
+
+    ``bytes_per_outer_step`` counts one model-payload reduction round per
+    outer step for every local-step algorithm (``comm_rounds_per_outer=1``)
+    and none inside the tau local steps — the paper's communication claim.
+    XLA lowers a logical round leafwise, so the op ceilings multiply the
+    round count by ``n_param_leaves`` (+ ``n_metric_reductions`` scalar
+    reductions for the loss metrics, which ride along with the global step);
+    the payload ceilings multiply the model payload by ``payload_slack``
+    (dtype/padding headroom — metric scalars are absorbed by a 1 KiB floor).
+
+      * ``local``        — the tau local steps: ZERO collectives of any kind.
+      * ``global_dense`` — replicated global step: one reduction round
+        (the paper's single all-reduce), nothing else.
+      * ``global_zero``  — ZeRO-sharded global step: one reduction round
+        (reduce-scatter, or all-reduce on backends without it) plus one
+        gather round (the x_{t+1,0} broadcast / all-gather); no stray
+        second reduction.
+    """
+    if phase not in PHASES:
+        raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
+    reduce_rounds = 0 if phase == "local" else 1
+    gather_rounds = 1 if phase == "global_zero" else 0
+    pay = int(payload_slack * payload_bytes) + 1024
+    return {
+        "phase": phase,
+        "reduce_rounds": reduce_rounds,
+        "gather_rounds": gather_rounds,
+        "max_reduce_ops": reduce_rounds * (n_param_leaves + n_metric_reductions),
+        "max_gather_ops": gather_rounds * (n_param_leaves + n_metric_reductions),
+        "max_reduce_bytes": reduce_rounds * pay,
+        "max_gather_bytes": gather_rounds * pay,
+        "reduce_class": list(REDUCE_CLASS),
+        "gather_class": list(GATHER_CLASS),
+    }

@@ -30,9 +30,9 @@ def _time(fn, *args, iters=20):
 
 
 def bench_dsm_kernel(n=1_000_000):
-    key = jax.random.PRNGKey(0)
-    x0 = jax.random.normal(key, (n,), jnp.float32).astype(jnp.bfloat16)
-    m = jax.random.normal(key, (n,), jnp.float32)
+    k_x0, k_m = jax.random.split(jax.random.PRNGKey(0))
+    x0 = jax.random.normal(k_x0, (n,), jnp.float32).astype(jnp.bfloat16)
+    m = jax.random.normal(k_m, (n,), jnp.float32)
     xt = (x0.astype(jnp.float32) - 0.01).astype(jnp.bfloat16)
     gamma = jnp.float32(0.01)
     hp = dict(eta=1.0, beta1=0.95, beta2=0.98, lam=0.1)
@@ -46,11 +46,11 @@ def bench_dsm_kernel(n=1_000_000):
 
 
 def bench_adamw_kernel(n=1_000_000):
-    key = jax.random.PRNGKey(1)
-    p = jax.random.normal(key, (n,), jnp.float32).astype(jnp.bfloat16)
-    g = jax.random.normal(key, (n,), jnp.float32).astype(jnp.bfloat16)
-    m = jax.random.normal(key, (n,), jnp.float32)
-    v = jnp.abs(jax.random.normal(key, (n,), jnp.float32))
+    k_p, k_g, k_m, k_v = jax.random.split(jax.random.PRNGKey(1), 4)
+    p = jax.random.normal(k_p, (n,), jnp.float32).astype(jnp.bfloat16)
+    g = jax.random.normal(k_g, (n,), jnp.float32).astype(jnp.bfloat16)
+    m = jax.random.normal(k_m, (n,), jnp.float32)
+    v = jnp.abs(jax.random.normal(k_v, (n,), jnp.float32))
     gamma, step = jnp.float32(1e-3), jnp.float32(3)
 
     jitted = jax.jit(lambda a, b, c, d: ref.adamw_update_ref(

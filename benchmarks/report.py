@@ -35,7 +35,7 @@ def dryrun_table(dirname="experiments/dryrun") -> str:
                     if shape == "long_500k" and not topo.supports_long_context:
                         lines.append(
                             f"| {arch} | {shape} | {mesh} | N/A (full-attention; "
-                            f"spec-sanctioned skip, DESIGN.md) | – | – | – |")
+                            "spec-sanctioned skip, DESIGN.md) | – | – | – |")
                     continue
                 if rec["status"] != "ok":
                     lines.append(f"| {arch} | {shape} | {mesh} | **ERROR** | – | – | – |")

@@ -43,7 +43,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, ARCH_IDS, arch_supports_shape, load_arch
 from repro.configs import specs as S
-from repro.core import DSMConfig, constant, dsm_init, get_base_optimizer
+from repro.core import DSMConfig, get_base_optimizer
 from repro.core.dsm import _broadcast_workers, global_sign_momentum_step
 from repro.distributed import sharding as shd
 from repro.launch import dryrun as DR
@@ -94,7 +94,6 @@ def _train_micro_cost(cfg, topo, shape, mesh, W, zero, n_layers):
     rep = () if topo.attn_tp else ("wq", "wk", "wv", "wo")
     aps = S.abstract_params(rcfg)
     wparams = jax.eval_shape(lambda p: _broadcast_workers(p, W), aps)
-    bm = shape.global_batch // (W * topo.grad_accum)
     full = S.train_batch_specs(cfg, topo, shape, W)
     micro = jax.tree.map(
         lambda l: jax.ShapeDtypeStruct((W,) + l.shape[3:], l.dtype), full
@@ -139,7 +138,8 @@ def _train_base_cost(cfg, topo, mesh, W, zero):
         def per_worker(p, g, bs):
             d, new_bs = base_opt.direction(g, bs, p, jnp.zeros((), jnp.int32))
             new_p = jax.tree.map(
-                lambda x, dd: (x.astype(jnp.float32) - 3e-4 * dd.astype(jnp.float32)).astype(x.dtype),
+                lambda x, dd: (x.astype(jnp.float32)
+                               - 3e-4 * dd.astype(jnp.float32)).astype(x.dtype),
                 p, d)
             return new_p, new_bs
 

@@ -8,7 +8,6 @@ the 512-device dry-run env and run as a separate process).
 import argparse
 import json
 import os
-import sys
 
 
 def _emit(name, value, derived=""):

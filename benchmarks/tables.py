@@ -15,7 +15,6 @@ Paper claims being checked:
 
 from __future__ import annotations
 
-import dataclasses
 
 import numpy as np
 

@@ -1,0 +1,452 @@
+"""Custom AST lint: the jax bug classes generic linters cannot see.
+
+Rules (catalog in docs/analysis.md; suppress a line with ``# noqa: RPR0xx``
+or a bare ``# noqa``):
+
+  RPR001  reused jax.random key — the same key Name consumed by two
+          ``jax.random`` primitives without an intervening reassignment
+          (``split``/re-bind).  ``fold_in(key, data)`` is exempt: deriving
+          many keys from one root with distinct fold data is the sanctioned
+          idiom.  This is the bug class that silently breaks bit-exact
+          resume: two sites drawing identical bits.
+  RPR002  host sync inside jit-reachable code — ``float()`` / ``int()`` /
+          ``bool()`` on non-literals, ``.item()`` / ``.tolist()``,
+          ``np.asarray`` / ``np.array``, ``jax.device_get`` inside a
+          function reachable from a ``jax.jit`` / ``shard_map`` region of
+          the same module.  Inside jit these either fail on tracers or,
+          worse, silently force a device round-trip per call when the
+          region falls back to eager.
+  RPR003  Python ``if`` / ``while`` on a traced value inside jit-reachable
+          code — the test expression contains a jnp/jax.lax call (or a
+          local assigned from one): a TracerBoolConversionError at best,
+          a silently specialized branch at worst.
+  RPR004  mutable default argument — ``[]`` / ``{}`` / ``set()`` defaults
+          on function parameters or dataclass fields (config dataclasses
+          are the motivating case: a shared mutable default aliases state
+          across configs).
+
+The checker is intentionally module-local and conservative: jit roots are
+functions named in ``jax.jit(...)`` / ``shard_map(...)`` calls or carrying
+``@jit`` / ``@partial(jax.jit, ...)`` decorators, and reachability follows
+any Name reference from those roots to other functions defined in the same
+module (callbacks included).  No jax import — pure ast.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Iterable, Optional
+
+RULES = {
+    "RPR001": "reused jax.random key (no split between consumers)",
+    "RPR002": "host sync inside jit-reachable code",
+    "RPR003": "Python control flow on a traced value inside jit-reachable code",
+    "RPR004": "mutable default argument",
+}
+
+# jax.random attributes that do NOT consume their key argument's uniqueness
+_NON_CONSUMING = {"PRNGKey", "key", "fold_in", "key_data", "wrap_key_data",
+                  "key_impl", "clone"}
+
+_HOST_SYNC_METHODS = {"item", "tolist"}
+_HOST_SYNC_BUILTINS = {"float", "int", "bool"}
+_NP_SYNC_FUNCS = {"asarray", "array"}
+
+_JIT_WRAPPERS = {"jit", "shard_map", "pmap"}
+_TRACED_FN_ROOTS = {"jnp", "lax"}  # jnp.*, jax.lax.*, lax.* calls yield tracers
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """['jax', 'random', 'split'] for jax.random.split; [] if not a chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def _is_jax_random_call(call: ast.Call) -> Optional[str]:
+    """The jax.random function name if this is a jax.random.<fn> call."""
+    chain = _attr_chain(call.func)
+    if len(chain) >= 2 and chain[-2] == "random" and chain[0] in (
+            "jax", "jrandom", "random"):
+        return chain[-1]
+    if len(chain) == 2 and chain[0] in ("jrandom", "jr"):
+        return chain[-1]
+    return None
+
+
+def _call_key_arg(call: ast.Call) -> Optional[str]:
+    """The Name passed as the key (first positional or ``key=``), if any."""
+    if call.args and isinstance(call.args[0], ast.Name):
+        return call.args[0].id
+    for kw in call.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    return None
+
+
+class _FunctionIndex(ast.NodeVisitor):
+    """Module pass 1: every function def + the jit/shard_map root set."""
+
+    def __init__(self):
+        self.defs: dict[str, ast.AST] = {}
+        self.roots: set[str] = set()
+
+    def _remember(self, node):
+        # innermost name wins is fine for our conservative purposes
+        self.defs.setdefault(node.name, node)
+
+    def visit_FunctionDef(self, node):
+        self._remember(node)
+        for dec in node.decorator_list:
+            if self._is_jit_expr(dec):
+                self.roots.add(node.name)
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node):
+        chain = _attr_chain(node.func)
+        if chain and chain[-1] in _JIT_WRAPPERS:
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name):
+                    self.roots.add(arg.id)
+                elif isinstance(arg, (ast.FunctionDef, ast.Lambda)):
+                    pass  # handled by the reachability walk on the parent
+        self.generic_visit(node)
+
+    @staticmethod
+    def _is_jit_expr(dec: ast.AST) -> bool:
+        chain = _attr_chain(dec)
+        if chain and chain[-1] in _JIT_WRAPPERS:
+            return True
+        if isinstance(dec, ast.Call):
+            chain = _attr_chain(dec.func)
+            if chain and chain[-1] in _JIT_WRAPPERS:
+                return True
+            if chain and chain[-1] == "partial" and dec.args:
+                inner = _attr_chain(dec.args[0])
+                if inner and inner[-1] in _JIT_WRAPPERS:
+                    return True
+        return False
+
+
+def _reachable_functions(tree: ast.Module) -> set[ast.AST]:
+    """Function nodes reachable from the module's jit/shard_map roots."""
+    index = _FunctionIndex()
+    index.visit(tree)
+    seen: set[str] = set()
+    work = [n for n in index.roots if n in index.defs]
+    reachable: set[ast.AST] = set()
+    while work:
+        name = work.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        fn = index.defs[name]
+        reachable.add(fn)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                reachable.add(node)  # nested defs inherit reachability
+            if isinstance(node, ast.Name) and node.id in index.defs:
+                work.append(node.id)
+    return reachable
+
+
+def _terminates(body: list) -> bool:
+    """True if a statement list cannot fall through to the next statement."""
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue))
+
+
+def _is_mutable_default(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in ("list", "dict", "set")
+    return False
+
+
+def _is_dataclass(node: ast.ClassDef) -> bool:
+    for dec in node.decorator_list:
+        chain = _attr_chain(dec if not isinstance(dec, ast.Call) else dec.func)
+        if chain and chain[-1] == "dataclass":
+            return True
+    return False
+
+
+class _Linter:
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.lines = source.splitlines()
+        self.findings: list[Finding] = []
+
+    # -- suppression ------------------------------------------------------
+    def _suppressed(self, line: int, rule: str) -> bool:
+        if not 1 <= line <= len(self.lines):
+            return False
+        text = self.lines[line - 1]
+        if "# noqa" not in text:
+            return False
+        tail = text.split("# noqa", 1)[1]
+        codes = tail.lstrip(": ").split()
+        return not codes or rule in {c.strip(",") for c in codes}
+
+    def _add(self, node: ast.AST, rule: str, message: str):
+        if not self._suppressed(node.lineno, rule):
+            self.findings.append(Finding(
+                path=self.path, line=node.lineno, col=node.col_offset,
+                rule=rule, message=message))
+
+    # -- driver -----------------------------------------------------------
+    def run(self) -> list[Finding]:
+        try:
+            tree = ast.parse(self.source, filename=self.path)
+        except SyntaxError as e:
+            self.findings.append(Finding(
+                path=self.path, line=e.lineno or 1, col=e.offset or 0,
+                rule="RPR000", message=f"syntax error: {e.msg}"))
+            return self.findings
+        reachable = _reachable_functions(tree)
+        self._check_key_reuse(tree)
+        self._check_mutable_defaults(tree)
+        for fn in reachable:
+            self._check_host_sync(fn)
+            self._check_traced_branch(fn)
+        return self.findings
+
+    # -- RPR001 -----------------------------------------------------------
+    def _check_key_reuse(self, tree: ast.Module):
+        for fn in [n for n in ast.walk(tree)
+                   if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+            self._key_reuse_in_scope(fn)
+
+    def _key_reuse_in_scope(self, fn: ast.AST):
+        # Abstract interpretation in SOURCE order: a consuming use marks the
+        # name, a rebinding clears it, a second consuming use while marked
+        # fires.  If-branches fork from a snapshot and merge by union; loop
+        # bodies run twice so a loop-invariant key consumed each iteration
+        # (same bits every pass) is caught on the simulated second pass.
+        consumed: dict[str, int] = {}
+
+        def clear(target: ast.AST):
+            for n in ast.walk(target):
+                if isinstance(n, ast.Name):
+                    consumed.pop(n.id, None)
+
+        def eval_expr(expr: Optional[ast.AST]):
+            if expr is None:
+                return
+            deferred: set[int] = set()  # nodes inside lambdas: deferred scope
+            for node in ast.walk(expr):
+                if isinstance(node, ast.Lambda):
+                    for sub in ast.walk(node):
+                        if sub is not node:
+                            deferred.add(id(sub))
+            for node in ast.walk(expr):
+                if id(node) in deferred or not isinstance(node, ast.Call):
+                    continue
+                rf = _is_jax_random_call(node)
+                if rf is None or rf in _NON_CONSUMING:
+                    continue
+                key = _call_key_arg(node)
+                if key is None:
+                    continue
+                if key in consumed:
+                    self._add(
+                        node, "RPR001",
+                        f"key {key!r} already consumed by jax.random at line "
+                        f"{consumed[key]}; split it (or fold_in) before "
+                        "drawing again — identical bits break bit-exact "
+                        "resume")
+                else:
+                    consumed[key] = node.lineno
+
+        def run_body(stmts):
+            for stmt in stmts:
+                run_stmt(stmt)
+
+        def run_stmt(stmt: ast.stmt):
+            nonlocal consumed
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                return  # nested scopes are linted on their own
+            if isinstance(stmt, ast.Assign):
+                eval_expr(stmt.value)
+                for t in stmt.targets:
+                    clear(t)
+            elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+                eval_expr(stmt.value)
+                clear(stmt.target)
+            elif isinstance(stmt, (ast.Expr, ast.Return)):
+                eval_expr(stmt.value)
+            elif isinstance(stmt, ast.If):
+                eval_expr(stmt.test)
+                snapshot = dict(consumed)
+                run_body(stmt.body)
+                # a branch that cannot fall through (return/raise/...) does
+                # not contribute its consumptions to the merged state
+                after_then = snapshot if _terminates(stmt.body) else consumed
+                consumed = dict(snapshot)
+                run_body(stmt.orelse)
+                if _terminates(stmt.orelse):
+                    consumed = dict(after_then)
+                else:
+                    consumed = {**after_then, **consumed}
+            elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+                eval_expr(stmt.iter)
+                for _ in range(2):  # second pass models the next iteration
+                    clear(stmt.target)
+                    run_body(stmt.body)
+                run_body(stmt.orelse)
+            elif isinstance(stmt, ast.While):
+                for _ in range(2):
+                    eval_expr(stmt.test)
+                    run_body(stmt.body)
+                run_body(stmt.orelse)
+            elif isinstance(stmt, ast.With):
+                for item in stmt.items:
+                    eval_expr(item.context_expr)
+                    if item.optional_vars is not None:
+                        clear(item.optional_vars)
+                run_body(stmt.body)
+            elif isinstance(stmt, ast.Try):
+                run_body(stmt.body)
+                for handler in stmt.handlers:
+                    run_body(handler.body)
+                run_body(stmt.orelse)
+                run_body(stmt.finalbody)
+            else:
+                # raise/assert/delete/global/... — evaluate any embedded
+                # expressions conservatively
+                for child in ast.iter_child_nodes(stmt):
+                    if isinstance(child, ast.expr):
+                        eval_expr(child)
+
+        run_body(getattr(fn, "body", []))
+
+    # -- RPR002 -----------------------------------------------------------
+    def _check_host_sync(self, fn: ast.AST):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id in _HOST_SYNC_BUILTINS
+                    and node.args
+                    and not isinstance(node.args[0], ast.Constant)):
+                self._add(node, "RPR002",
+                          f"{node.func.id}() forces a host sync inside "
+                          "jit-reachable code (use jnp casts on device)")
+            elif (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _HOST_SYNC_METHODS):
+                self._add(node, "RPR002",
+                          f".{node.func.attr}() forces a host sync inside "
+                          "jit-reachable code")
+            elif (len(chain) == 2 and chain[0] in ("np", "numpy")
+                    and chain[1] in _NP_SYNC_FUNCS):
+                self._add(node, "RPR002",
+                          f"{'.'.join(chain)}() materializes on host inside "
+                          "jit-reachable code (use jnp.asarray)")
+            elif chain[-2:] == ["jax", "device_get"] or chain == ["device_get"]:
+                self._add(node, "RPR002",
+                          "jax.device_get() inside jit-reachable code")
+
+    # -- RPR003 -----------------------------------------------------------
+    def _traced_locals(self, fn: ast.AST) -> set[str]:
+        traced: set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+                chain = _attr_chain(node.value.func)
+                if chain and (chain[0] in _TRACED_FN_ROOTS
+                              or chain[:2] == ["jax", "lax"]):
+                    for t in node.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                traced.add(n.id)
+        return traced
+
+    def _check_traced_branch(self, fn: ast.AST):
+        traced = self._traced_locals(fn)
+
+        def is_traced_expr(expr: ast.AST) -> bool:
+            for n in ast.walk(expr):
+                if isinstance(n, ast.Call):
+                    chain = _attr_chain(n.func)
+                    if chain and (chain[0] in _TRACED_FN_ROOTS
+                                  or chain[:2] == ["jax", "lax"]):
+                        return True
+                if isinstance(n, ast.Name) and n.id in traced:
+                    return True
+            return False
+
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)) and \
+                    is_traced_expr(node.test):
+                kw = "if" if isinstance(node, ast.If) else "while"
+                self._add(node, "RPR003",
+                          f"Python `{kw}` on a traced value inside "
+                          "jit-reachable code — use jnp.where / lax.cond")
+
+    # -- RPR004 -----------------------------------------------------------
+    def _check_mutable_defaults(self, tree: ast.Module):
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                args = node.args
+                for default in list(args.defaults) + \
+                        [d for d in args.kw_defaults if d is not None]:
+                    if _is_mutable_default(default):
+                        self._add(default, "RPR004",
+                                  "mutable default argument in "
+                                  f"{node.name}() — shared across calls")
+            elif isinstance(node, ast.ClassDef) and _is_dataclass(node):
+                for stmt in node.body:
+                    if isinstance(stmt, ast.AnnAssign) and stmt.value is not None \
+                            and _is_mutable_default(stmt.value):
+                        self._add(stmt.value, "RPR004",
+                                  "mutable default on dataclass field of "
+                                  f"{node.name} — shared across instances")
+
+
+def lint_source(source: str, path: str = "<string>") -> list[Finding]:
+    return _Linter(path, source).run()
+
+
+def lint_paths(paths: Iterable[str]) -> list[Finding]:
+    """Lint every .py file under the given files/directories."""
+    findings: list[Finding] = []
+    files: list[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = [d for d in dirs if d != "__pycache__"]
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        else:
+            files.append(p)
+    for f in files:
+        with open(f, encoding="utf-8") as fh:
+            findings.extend(lint_source(fh.read(), path=f))
+    return findings

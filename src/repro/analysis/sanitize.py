@@ -1,0 +1,140 @@
+"""Runtime sanitizers for the training hot loop (opt-in: ``--sanitize``).
+
+Static analysis cannot see everything: a host sync smuggled in through a
+library call, a shape-polymorphic step that silently recompiles every
+round, a NaN that escapes the survivor mask.  These guards catch that
+class at runtime, cheaply enough to run in CI:
+
+  * ``no_implicit_host_sync()`` — ``jax.transfer_guard_device_to_host``
+    around the hot loop: any implicit device->host transfer (a stray
+    ``float()`` on a device array mid-loop) raises instead of silently
+    blocking the device.  A no-op on the CPU backend, where device
+    buffers are host buffers — armed on real accelerators.
+  * ``RecompilationCounter`` — ``jax_log_compiles``-based: counts XLA
+    compilations per function name while active.  The steady-state outer
+    step must compile EXACTLY once; a second compile means the step is
+    shape- or dtype-polymorphic round to round (the classic silent 100x
+    slowdown).
+  * ``debug_nans()`` — the chaos tier: with fault injection corrupting
+    worker contributions, run the whole loop under ``jax_debug_nans``;
+    the survivor mask must keep every jit OUTPUT finite, so a regression
+    in the zero-before-sum masking trips immediately.
+
+All three are context managers that restore prior config on exit, so
+they compose with tests and nested use.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import logging
+import re
+from typing import Iterator, Optional
+
+import jax
+
+
+class SanitizeError(RuntimeError):
+    """A runtime sanitizer tripped (recompilation, host sync, NaN)."""
+
+
+@contextlib.contextmanager
+def no_implicit_host_sync(enabled: bool = True) -> Iterator[None]:
+    """Disallow implicit device->host transfers inside the block."""
+    if not enabled:
+        yield
+        return
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield
+
+
+@contextlib.contextmanager
+def debug_nans(enabled: bool = True) -> Iterator[None]:
+    """Enable ``jax_debug_nans`` inside the block (chaos-test tier)."""
+    if not enabled:
+        yield
+        return
+    prev = jax.config.jax_debug_nans
+    jax.config.update("jax_debug_nans", True)
+    try:
+        yield
+    finally:
+        jax.config.update("jax_debug_nans", prev)
+
+
+# "Compiling <name> with global shapes and types ..." — emitted by
+# jax._src.interpreters.pxla under jax_log_compiles.
+_COMPILE_RE = re.compile(r"^Compiling ([^\s]+) with")
+
+
+class _CompileLogHandler(logging.Handler):
+    def __init__(self, counter: "RecompilationCounter"):
+        super().__init__(level=logging.DEBUG)
+        self._counter = counter
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            m = _COMPILE_RE.match(record.getMessage())
+        except Exception:
+            return
+        if m:
+            name = m.group(1)
+            self._counter.compiles[name] = \
+                self._counter.compiles.get(name, 0) + 1
+
+
+class RecompilationCounter:
+    """Count XLA compilations per function name while active.
+
+    >>> with RecompilationCounter() as rc:
+    ...     step(state, batch); step(state, batch2)
+    >>> rc.count("outer_step")
+    1
+    >>> rc.assert_steady_state("outer_step")   # raises after a recompile
+
+    Based on ``jax_log_compiles`` (restored on exit).  Counting is by the
+    jitted callable's ``__name__`` as it appears in the compile log.
+    """
+
+    _LOGGER = "jax._src.interpreters.pxla"
+
+    def __init__(self):
+        self.compiles: dict[str, int] = {}
+        self._handler: Optional[_CompileLogHandler] = None
+        self._prev_flag = None
+        self._prev_level = None
+
+    def __enter__(self) -> "RecompilationCounter":
+        self._prev_flag = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        logger = logging.getLogger(self._LOGGER)
+        self._prev_level = logger.level
+        if logger.getEffectiveLevel() > logging.WARNING:
+            logger.setLevel(logging.WARNING)
+        self._handler = _CompileLogHandler(self)
+        logger.addHandler(self._handler)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        logger = logging.getLogger(self._LOGGER)
+        if self._handler is not None:
+            logger.removeHandler(self._handler)
+        if self._prev_level is not None:
+            logger.setLevel(self._prev_level)
+        jax.config.update("jax_log_compiles", self._prev_flag)
+
+    def count(self, name: Optional[str] = None) -> int:
+        """Compilations of ``name`` (substring match), or total."""
+        if name is None:
+            return sum(self.compiles.values())
+        return sum(v for k, v in self.compiles.items() if name in k)
+
+    def assert_steady_state(self, name: str, max_compiles: int = 1) -> None:
+        """Raise SanitizeError if ``name`` compiled more than allowed."""
+        n = self.count(name)
+        if n > max_compiles:
+            raise SanitizeError(
+                f"{name!r} compiled {n} times (budget {max_compiles}): the "
+                "step is shape/dtype-polymorphic round to round — every "
+                "recompile stalls the hot loop (observed compiles: "
+                f"{self.compiles})")

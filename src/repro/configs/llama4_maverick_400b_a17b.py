@@ -1,4 +1,5 @@
-"""Architecture config: Llama-4 Maverick 400B-a17B — interleaved MoE (128e top-1 + shared), early fusion
+"""Architecture config: Llama-4 Maverick 400B-a17B — interleaved MoE
+(128e top-1 + shared experts), early fusion
 Source: hf:meta-llama/Llama-4-Scout-17B-16E (Maverick per assignment)
 """
 

@@ -18,7 +18,7 @@ pluggable global update on ``(x0, aux, x_tau_mean, gamma)``.
 
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

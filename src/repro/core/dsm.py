@@ -29,7 +29,6 @@ provided for validation; training uses the real sign.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax

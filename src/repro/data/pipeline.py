@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import glob
 import os
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 
@@ -93,7 +93,6 @@ def dsm_batches(
             for i in range(n_workers)]
     while True:
         tokens = np.stack([
-            rngs[i].permutation(0) if False else
             corpus.sample(rngs[i], tau * accum * b_micro, seq)
             .reshape(tau, accum, b_micro, seq)
             for i in range(n_workers)

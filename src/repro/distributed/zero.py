@@ -32,6 +32,16 @@ over multiple outer steps; see tests/test_sharded_dsm.py).
     ``P(("worker", "zero"))`` on rows, and a ``shard_map`` runs the fused
     Pallas ``dsm_update_2d`` kernel on each rank's local slab.
 
+The collective structure described above is machine-checked: the HLO
+auditor (``python -m repro.analysis audit``, docs/analysis.md) compiles
+this step and asserts it stays within the ``global_zero`` phase budget —
+one reduction round (all-reduce/reduce-scatter equivalence class: the CPU
+partitioner lowers the scattered mean as all-reduce + slice) plus one
+gather round, leafwise, and nothing else.  The kernel slab path is
+excluded from the default audit matrix: its per-step re-slabbing emits
+collective-permute traffic that the flat-slab-storage ROADMAP item will
+remove, and pinning it in a budget today would only entrench the wart.
+
 See docs/sharding.md for the full dataflow.
 """
 

@@ -6,7 +6,6 @@ kernels TARGET TPU and are validated in interpret mode).
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

@@ -15,11 +15,10 @@ Two modes:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 
-from repro.configs import ARCH_IDS, PAPER_ARCH_IDS, load_arch
+from repro.configs import load_arch
 from repro.configs.base import ModelConfig
 
 
@@ -81,6 +80,14 @@ def main():
     ap.add_argument("--guard-nonfinite", action="store_true",
                     help="skip rounds that produce NaN/inf anywhere in the "
                          "training state")
+    # --- runtime sanitizers (docs/analysis.md) ---
+    ap.add_argument("--sanitize", action="store_true",
+                    help="transfer guard around the hot loop + recompilation "
+                         "counter (the steady-state outer step must compile "
+                         "exactly once)")
+    ap.add_argument("--sanitize-nans", action="store_true",
+                    help="run the loop under jax_debug_nans (chaos tier: "
+                         "masked NaNs must never reach a jit output)")
     ap.add_argument("--plan", action="store_true")
     args = ap.parse_args()
 
@@ -103,7 +110,7 @@ def main():
             "grad_accum": topo.grad_accum,
             "dryrun_cmd": (
                 f"PYTHONPATH=src python -m repro.launch.dryrun --arch {args.arch} "
-                f"--shape train_4k --mesh both"),
+                "--shape train_4k --mesh both"),
         }
         dr = f"experiments/dryrun/{args.arch}.train_4k.singlepod.json"
         if os.path.exists(dr):
@@ -129,6 +136,8 @@ def main():
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every,
         resume=args.resume,
+        sanitize=args.sanitize,
+        sanitize_nans=args.sanitize_nans,
     )
     corpus = MarkovCorpus(cfg.vocab_size, seed=1)
     result = run_training(cfg, s, corpus, log=print)

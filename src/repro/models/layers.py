@@ -310,7 +310,6 @@ def conv1d_apply(p: PyTree, x: jnp.ndarray) -> jnp.ndarray:
 
 def conv1d_step(p: PyTree, conv_state: jnp.ndarray, x_t: jnp.ndarray):
     """Decode: conv_state (B,width-1,C), x_t (B,C) -> (y_t, new_state)."""
-    width = p["w"].shape[0]
     window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,width,C)
     y = jnp.einsum("bwc,wc->bc", window.astype(F32), p["w"].astype(F32))
     y = (y + p["b"].astype(F32)).astype(x_t.dtype)

@@ -17,8 +17,7 @@ Public API (used by trainer / dryrun / serve):
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -90,7 +89,8 @@ def init_params(key, cfg) -> PyTree:
         "decoder": _init_stack(ks[1], cfg.pattern, cfg.n_scan_blocks, cfg.n_rem_layers, cfg),
     }
     if not cfg.tie_embeddings:
-        params["lm_head"] = L._init_dense(ks[2], (cfg.d_model, cfg.padded_vocab), cfg.p_dtype, scale=0.02)
+        params["lm_head"] = L._init_dense(
+            ks[2], (cfg.d_model, cfg.padded_vocab), cfg.p_dtype, scale=0.02)
     if cfg.family == "encdec":
         enc_pattern = ("encattn:dense",)
         params["encoder"] = _init_stack(ks[3], enc_pattern, cfg.enc_layers, 0, cfg)
@@ -249,7 +249,8 @@ def hidden_states(params, batch, cfg, remat=True, unroll=False,
         enc_out = _encode(params, batch["frames"], cfg, remat=remat, unroll=unroll)
         x = _embed(params, batch["tokens"], cfg)
     elif cfg.family == "vlm":
-        patches = batch["patches"].astype(cfg.act_dtype) @ params["patch_proj"].astype(cfg.act_dtype)
+        patches = (batch["patches"].astype(cfg.act_dtype)
+                   @ params["patch_proj"].astype(cfg.act_dtype))
         text = _embed(params, batch["tokens"], cfg)
         x = jnp.concatenate([patches, text], axis=1)
         n_prefix = patches.shape[1]
@@ -516,7 +517,8 @@ def prefill(params, batch, cfg, remat: bool = True, unroll: bool = False):
         enc_out = _encode(params, batch["frames"], cfg, remat=remat)
         x = _embed(params, batch["tokens"], cfg)
     elif cfg.family == "vlm":
-        patches = batch["patches"].astype(cfg.act_dtype) @ params["patch_proj"].astype(cfg.act_dtype)
+        patches = (batch["patches"].astype(cfg.act_dtype)
+                   @ params["patch_proj"].astype(cfg.act_dtype))
         text = _embed(params, batch["tokens"], cfg)
         x = jnp.concatenate([patches, text], axis=1)
     else:

@@ -7,6 +7,7 @@ workers (leading W axis).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable, Optional
@@ -71,6 +72,13 @@ class TrainSettings:
     checkpoint_every: int = 0       # outer steps; <=0 -> max(1, steps // 5)
     checkpoint_keep: int = 3        # rotated retention
     resume: bool = False            # auto-resume from checkpoint_dir's latest
+    # --- runtime sanitizers (docs/analysis.md) ---
+    sanitize: bool = False          # transfer guard around the hot loop +
+    #                                 recompilation counter (steady-state outer
+    #                                 step must compile exactly once)
+    sanitize_nans: bool = False     # jax_debug_nans over the whole loop (the
+    #                                 chaos tier: masked NaNs must never reach
+    #                                 a jit output)
 
 
 def _schedule(s: TrainSettings):
@@ -138,7 +146,8 @@ def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
 
     if s.algorithm == "perstep":
         init, step = BL.make_perstep_dp_step(loss_fn, base, s.tau, sched)
-        return init, (lambda st, b, rng, faults=None: step(st, b)), (lambda st: st.params), float(s.tau)
+        return (init, (lambda st, b, rng, faults=None: step(st, b)),
+                (lambda st: st.params), float(s.tau))
 
     if s.algorithm == "mv_signsgd":
         init, step = BL.make_mv_signsgd_step(
@@ -211,13 +220,21 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
         from repro.robustness import guards as G
 
         guard = G.init_guard()
-        jstep = jax.jit(G.make_guarded_step(
+        step_fn = G.make_guarded_step(
             step, nonfinite=s.guard_nonfinite,
-            spike_factor=s.guard_spike_factor, ema_beta=s.guard_ema_beta))
+            spike_factor=s.guard_spike_factor, ema_beta=s.guard_ema_beta)
     else:
         guard = None
-        jstep = jax.jit(step)
-    eval_loss_fn = jax.jit(lambda p, b: T.loss_fn(p, b, cfg, remat=False))
+        step_fn = step
+    # distinct compile-log names so the sanitizer's recompilation counter can
+    # tell the outer step from the (also jitted) eval loss
+    step_fn.__name__ = "train_step"
+    jstep = jax.jit(step_fn)
+
+    def eval_loss(p, b):
+        return T.loss_fn(p, b, cfg, remat=False)
+
+    eval_loss_fn = jax.jit(eval_loss)
 
     ckpt_on = bool(s.checkpoint_dir)
     ckpt_every = s.checkpoint_every if s.checkpoint_every > 0 else max(1, s.steps // 5)
@@ -260,7 +277,7 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
             state, key = reshard(tree["state"]), tree["key"]
             if guards_on:
                 guard = tree["guard"]
-            history = [float(x) for x in extra.get("history", [])]
+            history = [float(x) for x in extra.get("history", [])]  # resume = a sync point
             evals = [tuple(e) for e in extra.get("evals", [])]
             if log:
                 log(f"resumed from checkpoint at step {start_step}")
@@ -273,55 +290,80 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
     ev_batch = eval_batch(corpus, s.eval_batch, s.seq)
     needs_accum = s.algorithm in _DSM_FAMILY
 
+    # --- runtime sanitizers (docs/analysis.md): recompilation counter over
+    # the whole loop, debug_nans for the chaos tier, transfer guard around
+    # each step call (the eval/log/checkpoint host reads below stay OUTSIDE
+    # the guard — those are the sanctioned sync points) ---
+    recompiles = None
+    step_guard = contextlib.nullcontext
+    loop_ctx = contextlib.ExitStack()
+    if s.sanitize or s.sanitize_nans:
+        from repro.analysis import sanitize as SAN
+
+        if s.sanitize:
+            recompiles = loop_ctx.enter_context(SAN.RecompilationCounter())
+            step_guard = SAN.no_implicit_host_sync
+        if s.sanitize_nans:
+            loop_ctx.enter_context(SAN.debug_nans())
+
     batches = make_batches(start_step)
     t = start_step
     t0 = time.time()
-    while t < s.steps:
-        key, sub = jax.random.split(key)
-        batch = next(batches)
-        if not needs_accum:
-            batch = {k: v[:, :, 0] for k, v in batch.items()}
-        batch = jax.tree.map(jnp.asarray, batch)
-        fr = plan.round(t) if plan is not None else None
-        if guards_on:
-            state, guard, metrics = jstep(state, guard, batch, sub, fr)
-        else:
-            state, metrics = jstep(state, batch, sub, fr)
-        # device scalar: fetched only at eval/log/checkpoint points (the
-        # old float() here blocked on the device every outer step)
-        history.append(metrics["loss"])
+    try:
+        while t < s.steps:
+            key, sub = jax.random.split(key)
+            batch = next(batches)
+            if not needs_accum:
+                batch = {k: v[:, :, 0] for k, v in batch.items()}
+            batch = jax.tree.map(jnp.asarray, batch)
+            fr = plan.round(t) if plan is not None else None
+            with step_guard():
+                if guards_on:
+                    state, guard, metrics = jstep(state, guard, batch, sub, fr)
+                else:
+                    state, metrics = jstep(state, batch, sub, fr)
+                # device scalar: fetched only at eval/log/checkpoint points (the
+                # old float() here blocked on the device every outer step)
+                history.append(metrics["loss"])
 
-        if rollback_on and int(guard.bad_streak) >= s.guard_patience:
-            # the ONE per-round host read rollback requires (a scalar i32)
-            if rollbacks >= s.guard_max_rollbacks:
-                raise RuntimeError(
-                    f"training diverged: {int(guard.bad_streak)} consecutive "
-                    f"bad rounds at step {t} after {rollbacks} rollbacks")
-            rollbacks += 1
-            tree, t_ck, extra = CK.restore_latest(
-                s.checkpoint_dir, ckpt_tree(state, guard, key))
-            state, key = reshard(tree["state"]), tree["key"]
-            guard = tree["guard"]._replace(bad_streak=jnp.zeros((), jnp.int32))
-            history = [float(x) for x in extra.get("history", [])]
-            evals = [tuple(e) for e in extra.get("evals", [])]
-            if log:
-                log(f"rollback #{rollbacks}: step {t} -> checkpoint at {t_ck}")
-            batches = make_batches(t_ck)
-            t = t_ck
-            continue
+            if rollback_on and int(guard.bad_streak) >= s.guard_patience:
+                # the ONE per-round host read rollback requires (a scalar i32)
+                if rollbacks >= s.guard_max_rollbacks:
+                    raise RuntimeError(
+                        f"training diverged: {int(guard.bad_streak)} consecutive "
+                        f"bad rounds at step {t} after {rollbacks} rollbacks")
+                rollbacks += 1
+                tree, t_ck, extra = CK.restore_latest(
+                    s.checkpoint_dir, ckpt_tree(state, guard, key))
+                state, key = reshard(tree["state"]), tree["key"]
+                guard = tree["guard"]._replace(bad_streak=jnp.zeros((), jnp.int32))
+                history = [float(x) for x in extra.get("history", [])]  # rollback = a sync point
+                evals = [tuple(e) for e in extra.get("evals", [])]
+                if log:
+                    log(f"rollback #{rollbacks}: step {t} -> checkpoint at {t_ck}")
+                batches = make_batches(t_ck)
+                t = t_ck
+                continue
 
-        t += 1
-        if t % s.eval_every == 0 or t == s.steps:
-            el = float(eval_loss_fn(eval_params(state), ev_batch))
-            evals.append((t, el))
-            if log:
-                log(f"step {t:4d} train={float(history[-1]):.4f} eval={el:.4f}")
-        if ckpt_on and t % ckpt_every == 0:
-            history = [float(x) for x in history]  # checkpoint = a sync point
-            CK.save_checkpoint(
-                s.checkpoint_dir, ckpt_tree(state, guard, key), t,
-                keep=s.checkpoint_keep,
-                extra={"history": history, "evals": [list(e) for e in evals]})
+            t += 1
+            if t % s.eval_every == 0 or t == s.steps:
+                el = float(eval_loss_fn(eval_params(state), ev_batch))
+                evals.append((t, el))
+                if log:
+                    log(f"step {t:4d} train={float(history[-1]):.4f} eval={el:.4f}")
+            if ckpt_on and t % ckpt_every == 0:
+                history = [float(x) for x in history]  # checkpoint = a sync point
+                CK.save_checkpoint(
+                    s.checkpoint_dir, ckpt_tree(state, guard, key), t,
+                    keep=s.checkpoint_keep,
+                    extra={"history": history, "evals": [list(e) for e in evals]})
+    finally:
+        loop_ctx.close()
+
+    if recompiles is not None:
+        # steady state: the outer step compiles EXACTLY once; a second
+        # compile means a shape/dtype-polymorphic step (SanitizeError)
+        recompiles.assert_steady_state("train_step", max_compiles=1)
 
     history = [float(x) for x in history]
     return {
@@ -333,5 +375,6 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
         "wall_s": time.time() - t0,
         "skipped_rounds": int(guard.skipped) if guards_on else 0,
         "rollbacks": rollbacks,
+        "step_compiles": recompiles.count("train_step") if recompiles else None,
         "state": state,
     }

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import checkpoint as CK
-from repro.core import DSMConfig, adamw, constant, dsm_init, make_dsm_step, sgd
+from repro.core import DSMConfig, adamw, constant, dsm_init, make_dsm_step
 
 SRC = os.path.join(os.path.dirname(__file__), os.pardir, "src")
 

@@ -11,7 +11,7 @@ from repro.checkpoint import checkpoint as CK
 from repro.configs import ARCH_IDS, load_arch
 from repro.configs import specs as S
 from repro.configs.base import ModelConfig
-from repro.data.pipeline import MarkovCorpus, TextCorpus, dsm_batches, eval_batch
+from repro.data.pipeline import MarkovCorpus, TextCorpus, dsm_batches
 from repro.distributed import sharding as shd
 from repro.models import transformer as T
 from repro.train.serve import generate
