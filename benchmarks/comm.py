@@ -24,6 +24,24 @@ LOCAL_STEP_ALGOS = ("dsm", "slowmo", "signed_slowmo", "lookahead",
                     "global_adamw", "local_avg")
 
 
+def wire_bytes_for_payload(payload_bytes: int, algo: str, tau: int,
+                           param_bytes: int = 2) -> tuple:
+    """``(wire_bytes_per_outer, comm_rounds_per_outer)`` for a raw payload.
+
+    The round model shared by ``bytes_per_outer_step`` (which derives the
+    payload from an arch id) and the runtime comm ledger
+    (``repro.obs.ledger``, which derives it from the live param pytree):
+    one all-reduce ~ 2x payload on the ring, per logical round.
+    """
+    if algo in LOCAL_STEP_ALGOS:
+        return 2 * payload_bytes, 1        # one model all-reduce / outer step
+    if algo == "perstep":
+        return 2 * payload_bytes * tau, tau  # gradient all-reduce every step
+    if algo == "mv_signsgd":
+        return payload_bytes // (8 * param_bytes) * 2, 1  # 1-bit signs each way
+    raise ValueError(algo)
+
+
 def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
                          param_bytes: int = 2, zero_sharded: bool = False,
                          shards: int = 1, device_parallel: bool = False,
@@ -57,18 +75,8 @@ def bytes_per_outer_step(arch_id: str, algo: str, tau: int,
     cfg = load_arch(arch_id).FULL
     n = S.param_count(cfg)
     payload = n * param_bytes
-    if algo in ("dsm", "slowmo", "signed_slowmo", "lookahead", "global_adamw",
-                "local_avg"):
-        wire = 2 * payload                      # one model all-reduce / outer step
-        rounds = 1
-    elif algo == "perstep":
-        wire = 2 * payload * tau                # gradient all-reduce every step
-        rounds = tau
-    elif algo == "mv_signsgd":
-        wire = payload // (8 * param_bytes) * 2  # 1-bit signs each way
-        rounds = 1
-    else:
-        raise ValueError(algo)
+    wire, rounds = wire_bytes_for_payload(payload, algo, tau,
+                                          param_bytes=param_bytes)
     out = {
         "arch": arch_id, "algo": algo, "tau": tau,
         "wire_bytes_per_outer": wire,

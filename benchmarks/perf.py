@@ -1,0 +1,78 @@
+"""Perf snapshot: the bench-trajectory artifact (``BENCH_<name>.json``).
+
+Runs a short instrumented nano-DSM training through the real trainer with
+an obs run directory, and distills it into one JSON snapshot at the repo
+root: steps/sec, tokens/sec, and per-phase milliseconds from the obs spans
+(train window, local-phase / global-step probe, eval, checkpoint).  CI's
+nightly job regenerates it so the trajectory of the numbers is visible in
+version control — ROADMAP's "fast as the hardware allows" needs a baseline
+to beat.
+
+Snapshots are environment-dependent (CPU count, jax version); the manifest
+fields embedded in the snapshot say where a number came from.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Optional
+
+
+def perf_snapshot(steps: int = 12, n_workers: int = 4, tau: int = 4,
+                  run_dir: Optional[str] = None) -> dict:
+    """Train nano-DSM with obs enabled; return the snapshot dict."""
+    import jax
+
+    from benchmarks.tables import NANO
+    from repro.data.pipeline import MarkovCorpus
+    from repro.obs.summarize import summarize_run
+    from repro.train.trainer import TrainSettings, run_training
+
+    owns_dir = run_dir is None
+    if owns_dir:
+        run_dir = tempfile.mkdtemp(prefix="perf_snapshot_")
+    s = TrainSettings(
+        algorithm="dsm", n_workers=n_workers, tau=tau, steps=steps,
+        eval_every=max(steps // 2, 1), run_dir=run_dir,
+    )
+    result = run_training(NANO, s, MarkovCorpus(NANO.vocab_size, seed=1))
+    summary = summarize_run(run_dir)
+
+    wall = result["wall_s"]
+    phase_ms = {name: round(v["ms_per"], 3)
+                for name, v in (result["phase_ms"] or {}).items()}
+    return {
+        "bench": "nano_dsm",
+        "arch": "nano",
+        "algorithm": "dsm",
+        "steps": steps,
+        "n_workers": n_workers,
+        "tau": tau,
+        "tokens": result["tokens"],
+        "wall_s": round(wall, 3),
+        "steps_per_s": round(steps / wall, 4) if wall > 0 else None,
+        "tokens_per_s": round(result["tokens"] / wall, 1) if wall > 0 else None,
+        "final_eval": round(result["final_eval"], 4),
+        "phase_ms": phase_ms,
+        "sign_agree_final": (summary["scalars"].get("sign_agree") or {}).get("last"),
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "git_sha": summary.get("git_sha"),
+    }
+
+
+def write_snapshot(snapshot: dict, out_dir: str = ".") -> str:
+    path = os.path.join(out_dir, f"BENCH_{snapshot['bench']}.json")
+    with open(path, "w") as f:
+        json.dump(snapshot, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+if __name__ == "__main__":
+    snap = perf_snapshot()
+    print(write_snapshot(snap))

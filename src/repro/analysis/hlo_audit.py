@@ -285,6 +285,25 @@ def standard_audit(n_workers: int = 4, tau: int = 2,
              jnp.int32(0)),
         budget, name="local_phase"))
 
+    # the TRAINER-built instrumented step (build_algorithm wires the obs
+    # metric pack into the outer step): must fit the SAME global_zero
+    # budget as the bare zero_sharded step — the proof that observability
+    # added no collectives beyond the audited allowance
+    from repro.train.trainer import TrainSettings, build_algorithm
+
+    ts = TrainSettings(algorithm="dsm", n_workers=n_workers, tau=tau,
+                       steps=4, zero_sharded=True,
+                       device_parallel_local=True)
+    t_init, t_step, _, _ = build_algorithm(loss, ts, mesh=mesh)
+    t_state = t_init(params, n_workers)
+
+    def instrumented(st, b):
+        return t_step(st, b, None, None)
+
+    budget = CollectiveBudget.for_phase("global_zero", t_state.x0)
+    reports.append(audit_jitted(instrumented, (t_state, batch), budget,
+                                name="trainer_instrumented_zero"))
+
     if self_test:
         # plant one extra all-reduce of every param leaf on top of the
         # device-parallel step: the budget MUST flag it

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.base_opt import BaseOptimizer
+from repro.obs import metrics as OM
 
 PyTree = Any
 
@@ -413,10 +414,12 @@ def make_dsm_step(
     def outer_step(state: DSMState, batch, rng: Optional[jax.Array] = None,
                    faults=None):
         gamma = schedule(state.t)
+        n_workers = jax.tree.leaves(state.params)[0].shape[0]
 
-        params_w, base_state_w, losses = local_phase(
-            state.params, state.base_state, batch, gamma, state.inner
-        )
+        with jax.named_scope("dsm_local_phase"):
+            params_w, base_state_w, losses = local_phase(
+                state.params, state.base_state, batch, gamma, state.inner
+            )
 
         # --- fault injection + survivor weights (None -> dense fast path,
         # identical to the pre-robustness step) ---
@@ -427,37 +430,51 @@ def make_dsm_step(
             contrib = apply_faults(params_w, state.x0, faults)
         weights = _contribution_weights(contrib, cfg, faults)
 
-        if cfg.zero_sharded and mesh is not None:
-            # --- lines 7-10, ZeRO-sharded: reduce-scatter(x_tau) ->
-            # shard-local sign momentum on each rank's 1/(W*zero) slice ---
-            from repro.distributed import zero as Z
+        with jax.named_scope("dsm_global_step"):
+            if cfg.zero_sharded and mesh is not None:
+                # --- lines 7-10, ZeRO-sharded: reduce-scatter(x_tau) ->
+                # shard-local sign momentum on each rank's 1/(W*zero) slice ---
+                from repro.distributed import zero as Z
 
-            new_x0, new_m = Z.sharded_global_sign_momentum_step(
-                state.x0, state.m, contrib, gamma, cfg, mesh, rng,
-                weights=weights,
-            )
-        else:
-            # --- line 7: THE all-reduce over workers (once per tau local steps) ---
-            if weights is None:
-                x_tau_mean = jax.tree.map(lambda p: p.mean(axis=0), contrib)
+                new_x0, new_m, x_tau = Z.sharded_global_sign_momentum_step(
+                    state.x0, state.m, contrib, gamma, cfg, mesh, rng,
+                    weights=weights, return_x_tau=True,
+                )
+                # pre-update Delta/momentum stats on the sharded buffers:
+                # ONE psum for the whole pack (repro.obs.metrics)
+                stat = Z.sharded_stat_sums(state.x0, state.m, x_tau, gamma,
+                                           cfg.beta1, mesh)
             else:
-                x_tau_mean = masked_worker_mean(contrib, weights)
+                # --- line 7: THE all-reduce over workers (once per tau local steps) ---
+                if weights is None:
+                    x_tau = jax.tree.map(lambda p: p.mean(axis=0), contrib)
+                else:
+                    x_tau = masked_worker_mean(contrib, weights)
+                if mesh is not None:
+                    # the worker-axis reduction already replicates its result;
+                    # pin that layout so the stat sums below never re-reduce
+                    from repro.distributed import zero as Z
 
-            # --- lines 8-10: global sign momentum ---
-            new_x0, new_m = global_sign_momentum_step(
-                state.x0, state.m, x_tau_mean, gamma, cfg, rng
-            )
+                    x_tau = Z.constrain_replicated(x_tau, mesh)
 
+                # --- lines 8-10: global sign momentum ---
+                new_x0, new_m = global_sign_momentum_step(
+                    state.x0, state.m, x_tau, gamma, cfg, rng
+                )
+                stat = OM.tree_stat_sums(state.x0, state.m, x_tau, gamma,
+                                         cfg.beta1)
+
+        wsum = None
         if weights is not None:
             # skip-round: zero usable contributions -> x0 / m bit-untouched
-            ok = weights.sum() > 0
+            wsum = weights.sum()
+            ok = wsum > 0
             new_x0 = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
                                   new_x0, state.x0)
             new_m = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
                                  new_m, state.m)
 
         # --- line 11: synchronize workers (the all-gather when sharded) ---
-        n_workers = jax.tree.leaves(state.params)[0].shape[0]
         new_params = _broadcast_workers(new_x0, n_workers)
         if mesh is not None:
             from repro.distributed import zero as Z
@@ -473,11 +490,17 @@ def make_dsm_step(
             inner=state.inner + cfg.tau,
         )
         # losses is (tau, W): per-worker means happen HERE, outside the
-        # collective-free local phase
-        metrics = {"loss": losses.mean(), "gamma": gamma,
-                   "last_loss": losses[-1].mean()}
-        if weights is not None:
-            metrics["survivors"] = weights.sum()
+        # collective-free local phase, as ONE stacked reduction
+        loss_mean, last_loss, worker_spread = OM.loss_stats(losses)
+        metrics = {"loss": loss_mean, "gamma": gamma, "last_loss": last_loss}
+        metrics["pack"] = OM.finish_pack(
+            loss=loss_mean, last_loss=last_loss, gamma=gamma,
+            worker_spread=worker_spread, stat_sums=stat,
+            n_elems=OM.n_elements(state.x0),
+            survivor_frac=None if wsum is None else wsum / n_workers,
+        )
+        if wsum is not None:
+            metrics["survivors"] = wsum
         return new_state, metrics
 
     return outer_step

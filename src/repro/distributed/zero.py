@@ -157,10 +157,9 @@ def _scattered_worker_mean(params_w, mesh, weights=None):
     return constrain_global(x_tau, mesh)
 
 
-def _sharded_step_jnp(x0, m, params_w, gamma, cfg, mesh, rng, weights=None):
+def _sharded_step_jnp(x0, m, x_tau, gamma, cfg, mesh, rng):
     from repro.core.dsm import global_sign_momentum_step
 
-    x_tau = _scattered_worker_mean(params_w, mesh, weights)
     # force the jnp path: the elementwise update stays shard-local under the
     # output constraint (the kernel dispatch is handled by the slab path)
     jnp_cfg = dataclasses.replace(cfg, use_kernel=False)
@@ -204,15 +203,13 @@ def dsm_update_shard(x0_l, m_l, xt_l, gamma, *, eta, beta1, beta2, lam,
     )
 
 
-def _sharded_step_kernel(x0, m, params_w, gamma, cfg, mesh,
-                         interpret: Optional[bool] = None, weights=None):
+def _sharded_step_kernel(x0, m, x_tau, gamma, cfg, mesh,
+                         interpret: Optional[bool] = None):
     from repro.kernels.ops import _default_interpret
 
     interpret = _default_interpret() if interpret is None else interpret
     R = num_shards(mesh)
     gamma32 = jnp.asarray(gamma, jnp.float32)
-
-    x_tau = _scattered_worker_mean(params_w, mesh, weights)
 
     x0_leaves, treedef = jax.tree.flatten(x0)
     m_leaves = jax.tree.leaves(m)
@@ -266,7 +263,8 @@ def sharded_global_sign_momentum_step(
     mesh: Mesh,
     rng: Optional[jax.Array] = None,
     weights: Optional[jnp.ndarray] = None,
-) -> tuple[PyTree, PyTree]:
+    return_x_tau: bool = False,
+) -> tuple:
     """ZeRO-sharded eqs. (6)-(8): consumes per-worker iterates directly
     (the reduce-scatter subsumes the worker mean). Returns sharded
     (x_{t+1,0}, m_{t+1}); the caller's worker broadcast is the all-gather.
@@ -275,11 +273,72 @@ def sharded_global_sign_momentum_step(
     masked mean (repro.core.dsm.masked_worker_mean); the caller applies
     skip-round semantics when all weights are zero.
 
+    ``return_x_tau`` appends the scattered worker mean to the result so the
+    caller can compute diagnostics (repro.obs) against the SAME reduction —
+    the partitioner CSEs the shared subgraph, so asking for it compiles no
+    second collective.
+
     The fused-kernel slab path supports the deterministic sign only; the
     randomized-sign modes (theory §3.1) use the jnp/GSPMD path, whose
     sampled bits are layout-independent, so sharded == replicated there too.
     """
+    x_tau = _scattered_worker_mean(params_w, mesh, weights)
     if cfg.use_kernel and cfg.sign_mode == "sign":
-        return _sharded_step_kernel(x0, m, params_w, gamma, cfg, mesh,
-                                    weights=weights)
-    return _sharded_step_jnp(x0, m, params_w, gamma, cfg, mesh, rng, weights)
+        new_x0, new_m = _sharded_step_kernel(x0, m, x_tau, gamma, cfg, mesh)
+    else:
+        new_x0, new_m = _sharded_step_jnp(x0, m, x_tau, gamma, cfg, mesh, rng)
+    if return_x_tau:
+        return new_x0, new_m, x_tau
+    return new_x0, new_m
+
+
+# ---------------------------------------------------------------------------
+# sharded metric-pack support (repro.obs)
+# ---------------------------------------------------------------------------
+
+def constrain_replicated(tree: PyTree, mesh: Mesh) -> PyTree:
+    """Pin every leaf of a pytree to the fully-replicated layout."""
+    rep = NamedSharding(mesh, P())
+    return jax.tree.map(
+        lambda x: jax.lax.with_sharding_constraint(x, rep), tree)
+
+
+def sharded_stat_sums(x0: PyTree, m: PyTree, x_tau: PyTree, gamma,
+                      beta1: float, mesh: Mesh) -> jnp.ndarray:
+    """``repro.obs.metrics`` stat sums over ZeRO-sharded global buffers,
+    with ONE collective for the whole pack.
+
+    Each rank sums its own shard slices of every leaf, stacks the partials
+    into a single ``(N_STAT_SUMS,)`` vector, and ONE psum over the
+    flattened (worker, zero) ranks combines them — a naive leafwise
+    ``jnp.sum`` over sharded buffers would instead lower to one scalar
+    all-reduce per (leaf, statistic) and blow the audited ``global_zero``
+    budget.  Leaves ``param_pspecs`` left replicated (no divisible dim)
+    appear on all R ranks, so their partials are pre-scaled by
+    ``global_size / (local_size * R)`` — 1 for sharded leaves, 1/R for
+    replicated ones — making the psum count every element exactly once.
+    """
+    from repro.obs import metrics as OM
+
+    R = num_shards(mesh)
+    specs = global_buffer_pspecs(x0, mesh)
+    x0_leaves, _ = jax.tree.flatten(x0)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    m_leaves = jax.tree.leaves(m)
+    xt_leaves = jax.tree.leaves(x_tau)
+    global_sizes = [l.size for l in x0_leaves]
+
+    def rank_fn(g, x0_ls, m_ls, xt_ls):
+        tot = jnp.zeros((OM.N_STAT_SUMS,), jnp.float32)
+        for gsize, x0l, ml, xtl in zip(global_sizes, x0_ls, m_ls, xt_ls):
+            part = OM.stat_sums_block([x0l], [ml], [xtl], g, beta1)
+            tot = tot + (gsize / (x0l.size * R)) * part
+        return jax.lax.psum(tot, GLOBAL_AXES)
+
+    leaf_specs = list(spec_leaves)
+    return shard_map(
+        rank_fn, mesh=mesh,
+        in_specs=(P(), leaf_specs, leaf_specs, leaf_specs),
+        out_specs=P(),
+        check_rep=False,
+    )(jnp.asarray(gamma, jnp.float32), x0_leaves, m_leaves, xt_leaves)

@@ -80,6 +80,17 @@ def main():
     ap.add_argument("--guard-nonfinite", action="store_true",
                     help="skip rounds that produce NaN/inf anywhere in the "
                          "training state")
+    # --- observability (docs/observability.md) ---
+    ap.add_argument("--run-dir", default=None,
+                    help="observability run directory: manifest.json, "
+                         "events.jsonl (spans, comm ledger), scalars.csv; "
+                         "inspect with `python -m repro.obs summarize <dir>`")
+    ap.add_argument("--log-every", type=int, default=0,
+                    help="metric flush + log cadence in outer steps "
+                         "(default: the eval cadence)")
+    ap.add_argument("--profile-steps", default=None, metavar="A:B",
+                    help="capture a jax.profiler.trace for the inclusive "
+                         "outer-step range A:B into <run-dir>/profile")
     # --- runtime sanitizers (docs/analysis.md) ---
     ap.add_argument("--sanitize", action="store_true",
                     help="transfer guard around the hot loop + recompilation "
@@ -138,6 +149,9 @@ def main():
         resume=args.resume,
         sanitize=args.sanitize,
         sanitize_nans=args.sanitize_nans,
+        run_dir=args.run_dir,
+        log_every=args.log_every,
+        profile_steps=args.profile_steps,
     )
     corpus = MarkovCorpus(cfg.vocab_size, seed=1)
     result = run_training(cfg, s, corpus, log=print)
@@ -145,6 +159,9 @@ def main():
           f"(comm rounds: {result['comm_rounds']}, tokens: {result['tokens']}, "
           f"skipped rounds: {result['skipped_rounds']}, "
           f"rollbacks: {result['rollbacks']})")
+    if args.run_dir:
+        print(f"run dir: {args.run_dir} "
+              f"(summarize: python -m repro.obs summarize {args.run_dir})")
 
     if args.checkpoint:
         from repro.checkpoint import checkpoint as CK

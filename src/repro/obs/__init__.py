@@ -1,0 +1,41 @@
+"""Observability: on-device metrics, structured run sinks, phase tracing,
+and the comm ledger (docs/observability.md).
+
+Layout:
+
+  * ``metrics``   — the on-device metric pack computed INSIDE the jitted
+                    outer step (pure jnp; safe to import from core).
+  * ``sinks``     — per-run directory: manifest.json / events.jsonl /
+                    scalars.csv (host-side only).
+  * ``tracing``   — wall-time spans, ``jax.profiler.trace`` windows,
+                    device memory stats.
+  * ``ledger``    — observed (compiled-HLO) vs predicted (analytic model)
+                    communication bytes.
+  * ``summarize`` — ``python -m repro.obs summarize <run_dir>`` CLI.
+"""
+
+from repro.obs.metrics import (
+    IDX,
+    METRIC_NAMES,
+    N_METRICS,
+    finish_pack,
+    loss_stats,
+    minimal_pack,
+    tree_stat_sums,
+)
+from repro.obs.sinks import RunWriter, build_manifest, read_run
+from repro.obs.summarize import summarize_run
+
+__all__ = [
+    "IDX",
+    "METRIC_NAMES",
+    "N_METRICS",
+    "RunWriter",
+    "build_manifest",
+    "finish_pack",
+    "loss_stats",
+    "minimal_pack",
+    "read_run",
+    "summarize_run",
+    "tree_stat_sums",
+]

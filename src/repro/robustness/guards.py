@@ -99,6 +99,11 @@ def make_guarded_step(
         out_state = tree_select(ok, new_state, state)
         metrics = dict(metrics, guard_ok=ok, bad_streak=new_guard.bad_streak,
                        skipped_rounds=new_guard.skipped)
+        if "pack" in metrics:
+            # record the verdict in the on-device metric pack (repro.obs)
+            from repro.obs.metrics import set_guard_flag
+
+            metrics["pack"] = set_guard_flag(metrics["pack"], ok)
         return out_state, new_guard, metrics
 
     return guarded

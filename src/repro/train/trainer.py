@@ -9,12 +9,15 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.metrics import IDX as METRIC_IDX, METRIC_NAMES
 
 from repro.core import (
     DSMConfig,
@@ -79,6 +82,13 @@ class TrainSettings:
     sanitize_nans: bool = False     # jax_debug_nans over the whole loop (the
     #                                 chaos tier: masked NaNs must never reach
     #                                 a jit output)
+    # --- observability (docs/observability.md) ---
+    run_dir: Optional[str] = None   # obs run directory: manifest.json /
+    #                                 events.jsonl / scalars.csv / profile/
+    log_every: int = 0              # metric flush + log cadence in outer
+    #                                 steps; <=0 -> eval_every
+    profile_steps: Optional[str] = None  # "A:B": jax.profiler.trace window
+    #                                 (inclusive outer-step range)
 
 
 def _schedule(s: TrainSettings):
@@ -160,6 +170,21 @@ def build_algorithm(loss_fn, s: TrainSettings, mesh=None):
 
 
 _DSM_FAMILY = ("dsm", "signed_lookahead")
+
+
+def _decode_metrics_row(fetched: dict) -> np.ndarray:
+    """Host-side: one scalars.csv row from a fetched per-round metrics dict.
+
+    DSM-family steps carry the full on-device pack; baseline algorithms get
+    the loss / gamma (+ guard verdict) slots with NaN elsewhere.
+    """
+    if "pack" in fetched:
+        return np.asarray(fetched["pack"], np.float64).reshape(-1)
+    row = np.full((len(METRIC_NAMES),), np.nan)
+    for name in ("loss", "last_loss", "gamma", "guard_ok"):
+        if name in fetched:
+            row[METRIC_IDX[name]] = float(np.asarray(fetched[name]))
+    return row
 
 
 def _resolve_fault_plan(s: TrainSettings):
@@ -279,16 +304,91 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
                 guard = tree["guard"]
             history = [float(x) for x in extra.get("history", [])]  # resume = a sync point
             evals = [tuple(e) for e in extra.get("evals", [])]
+            # cumulative guard counters survive the restart (the guard state
+            # itself is restored bit-exact; the rollback count lives here)
+            rollbacks = int(extra.get("rollbacks", 0))
             if log:
                 log(f"resumed from checkpoint at step {start_step}")
     if ckpt_on and start_step == 0:
         # step-0 checkpoint: the rollback target always exists
         CK.save_checkpoint(s.checkpoint_dir, ckpt_tree(state, guard, key), 0,
                            keep=s.checkpoint_keep,
-                           extra={"history": [], "evals": []})
+                           extra={"history": [], "evals": [],
+                                  "rollbacks": 0, "skipped_rounds": 0})
 
     ev_batch = eval_batch(corpus, s.eval_batch, s.seq)
     needs_accum = s.algorithm in _DSM_FAMILY
+
+    def prep_batch(raw):
+        if not needs_accum:
+            raw = {k: v[:, :, 0] for k, v in raw.items()}
+        return jax.tree.map(jnp.asarray, raw)
+
+    # --- observability (docs/observability.md): run sinks + comm ledger +
+    # phase spans + profiler window.  Per-round metrics stay on device in
+    # `pending`; ALL host reads happen in flush_metrics() at the sanctioned
+    # sync points (log/eval/checkpoint/rollback), outside the transfer
+    # guard.  The comm-ledger lowering is itself a compile, so it runs
+    # BEFORE the sanitizers arm their recompilation counter. ---
+    obs_on = bool(s.run_dir)
+    writer = None
+    profile = None
+    phase_totals = None
+    probe_batch = probe_key = probe_fr = None
+    log_every = s.log_every if s.log_every > 0 else s.eval_every
+    pending: list = []  # (outer step number, on-device metrics dict)
+    if obs_on:
+        from repro.obs import sinks as OS
+        from repro.obs import tracing as OT
+        from repro.obs.ledger import compile_time_ledger
+
+        manifest = OS.build_manifest(
+            run_name=os.path.basename(os.path.normpath(s.run_dir)),
+            settings=s, model_cfg=cfg, mesh=mesh)
+        writer = OS.RunWriter(s.run_dir, manifest, resume=start_step > 0)
+        phase_totals = OT.PhaseTotals()
+        profile = OT.ProfileWindow(OT.parse_profile_steps(s.profile_steps),
+                                   os.path.join(s.run_dir, "profile"))
+        if start_step > 0:
+            writer.event("resumed", step=start_step)
+        probe_batch = prep_batch(next(make_batches(start_step)))
+        probe_key = jax.random.PRNGKey(s.seed)
+        probe_fr = plan.round(start_step) if plan is not None else None
+        probe_args = ((state, guard, probe_batch, probe_key, probe_fr)
+                      if guards_on
+                      else (state, probe_batch, probe_key, probe_fr))
+        ledger = compile_time_ledger(
+            step_fn, probe_args,
+            params=eval_params(state),
+            algo="dsm" if s.algorithm in _DSM_FAMILY else s.algorithm,
+            tau=s.tau,
+            phase="global_zero" if s.zero_sharded else "global_dense",
+            mesh=mesh, name="train_step")
+        writer.event("comm_ledger", **ledger)
+
+    def flush_metrics():
+        """ONE device_get for every pending round; returns the last decoded
+        scalar row (dict) or None.  Closes the running train-window span —
+        the fetch is the fence."""
+        nonlocal window_t0, window_steps
+        if not pending:
+            return None
+        fetched = jax.device_get([m for _, m in pending])
+        if obs_on and window_steps:
+            dt = time.monotonic() - window_t0
+            phase_totals.add("train_window", dt, n=window_steps)
+            writer.span("train_window", dt, n=window_steps,
+                        step=pending[-1][0])
+        row = None
+        for (step_no, _), m in zip(pending, fetched):
+            vals = _decode_metrics_row(m)
+            if writer is not None:
+                writer.metrics_row(step_no, vals)
+            row = dict(zip(METRIC_NAMES, (float(v) for v in vals)))
+        pending.clear()
+        window_steps = 0
+        window_t0 = time.monotonic()
+        return row
 
     # --- runtime sanitizers (docs/analysis.md): recompilation counter over
     # the whole loop, debug_nans for the chaos tier, transfer guard around
@@ -306,28 +406,39 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
         if s.sanitize_nans:
             loop_ctx.enter_context(SAN.debug_nans())
 
+    def ckpt_extra():
+        return {"history": history, "evals": [list(e) for e in evals],
+                "rollbacks": rollbacks,
+                "skipped_rounds": int(guard.skipped) if guards_on else 0}
+
     batches = make_batches(start_step)
     t = start_step
     t0 = time.time()
+    window_t0 = time.monotonic()
+    window_steps = 0
+    last_row = None
     try:
         while t < s.steps:
+            if profile is not None:
+                profile.tick(t)
             key, sub = jax.random.split(key)
-            batch = next(batches)
-            if not needs_accum:
-                batch = {k: v[:, :, 0] for k, v in batch.items()}
-            batch = jax.tree.map(jnp.asarray, batch)
+            batch = prep_batch(next(batches))
             fr = plan.round(t) if plan is not None else None
             with step_guard():
                 if guards_on:
                     state, guard, metrics = jstep(state, guard, batch, sub, fr)
                 else:
                     state, metrics = jstep(state, batch, sub, fr)
-                # device scalar: fetched only at eval/log/checkpoint points (the
-                # old float() here blocked on the device every outer step)
+                # device scalars: fetched only at eval/log/checkpoint points
+                # (the old float() here blocked on the device every outer step)
                 history.append(metrics["loss"])
+                pending.append((t + 1, metrics))
+                window_steps += 1
 
             if rollback_on and int(guard.bad_streak) >= s.guard_patience:
                 # the ONE per-round host read rollback requires (a scalar i32)
+                row = flush_metrics()  # rejected rounds are still observations
+                last_row = row or last_row
                 if rollbacks >= s.guard_max_rollbacks:
                     raise RuntimeError(
                         f"training diverged: {int(guard.bad_streak)} consecutive "
@@ -339,42 +450,124 @@ def run_training(cfg, s: TrainSettings, corpus=None, log: Optional[Callable] = N
                 guard = tree["guard"]._replace(bad_streak=jnp.zeros((), jnp.int32))
                 history = [float(x) for x in extra.get("history", [])]  # rollback = a sync point
                 evals = [tuple(e) for e in extra.get("evals", [])]
+                if writer is not None:
+                    writer.event("rollback", step=t, to_step=t_ck, n=rollbacks)
                 if log:
                     log(f"rollback #{rollbacks}: step {t} -> checkpoint at {t_ck}")
                 batches = make_batches(t_ck)
                 t = t_ck
+                window_t0 = time.monotonic()
                 continue
 
             t += 1
-            if t % s.eval_every == 0 or t == s.steps:
-                el = float(eval_loss_fn(eval_params(state), ev_batch))
+            is_eval = t % s.eval_every == 0 or t == s.steps
+            is_log = t % log_every == 0
+            did_ckpt = ckpt_on and t % ckpt_every == 0
+            if is_eval or is_log or did_ckpt:
+                # metric flush: ONE async fetch covering every round since
+                # the last sync point, with a step-consistent row to log
+                row = flush_metrics()
+                last_row = row or last_row
+            if is_eval:
+                if obs_on:
+                    with OT.Span("eval") as sp:  # float() is the fence
+                        el = float(eval_loss_fn(eval_params(state), ev_batch))
+                    phase_totals.add("eval", sp.seconds)
+                    writer.span("eval", sp.seconds, step=t)
+                    writer.event("eval", step=t, eval_loss=el)
+                else:
+                    el = float(eval_loss_fn(eval_params(state), ev_batch))
                 evals.append((t, el))
                 if log:
-                    log(f"step {t:4d} train={float(history[-1]):.4f} eval={el:.4f}")
-            if ckpt_on and t % ckpt_every == 0:
+                    train = last_row["loss"] if last_row else float(history[-1])
+                    log(f"step {t:4d} train={train:.4f} eval={el:.4f}")
+            elif is_log and log and last_row is not None:
+                log(f"step {t:4d} train={last_row['loss']:.4f}")
+            if did_ckpt:
                 history = [float(x) for x in history]  # checkpoint = a sync point
-                CK.save_checkpoint(
-                    s.checkpoint_dir, ckpt_tree(state, guard, key), t,
-                    keep=s.checkpoint_keep,
-                    extra={"history": history, "evals": [list(e) for e in evals]})
+                if obs_on:
+                    with OT.Span("checkpoint", state) as sp:
+                        CK.save_checkpoint(
+                            s.checkpoint_dir, ckpt_tree(state, guard, key), t,
+                            keep=s.checkpoint_keep, extra=ckpt_extra())
+                    phase_totals.add("checkpoint", sp.seconds)
+                    writer.span("checkpoint", sp.seconds, step=t)
+                    writer.event("checkpoint", step=t)
+                else:
+                    CK.save_checkpoint(
+                        s.checkpoint_dir, ckpt_tree(state, guard, key), t,
+                        keep=s.checkpoint_keep, extra=ckpt_extra())
+            if obs_on and (is_eval or is_log or did_ckpt):
+                # eval/checkpoint time must not leak into the next train window
+                window_t0 = time.monotonic()
     finally:
         loop_ctx.close()
+        if profile is not None:
+            profile.close()
 
     if recompiles is not None:
         # steady state: the outer step compiles EXACTLY once; a second
         # compile means a shape/dtype-polymorphic step (SanitizeError)
         recompiles.assert_steady_state("train_step", max_compiles=1)
 
+    wall = time.time() - t0
+    tokens = s.steps * s.tau * s.n_workers * s.b_micro * s.seq
+    last_row = flush_metrics() or last_row  # tail rounds (early exits)
+    phase_ms = None
+    if obs_on:
+        steps_done = t - start_step
+        # post-run phase probe: local phase and full outer step cannot be
+        # separately fenced in-loop (one fused jit), so re-time both fenced
+        # here; global step = outer step - local phase.  The probe fns get
+        # their own jits/names so the recompilation counter (already closed)
+        # and its steady-state assertion never see them.
+        if s.algorithm in _DSM_FAMILY and steps_done > 0:
+            from repro.core import make_local_phase
+
+            lp = make_local_phase(
+                loss_fn, get_base_optimizer(s.base_opt), accum=True,
+                device_parallel=s.device_parallel_local, mesh=mesh)
+
+            def local_phase_probe(p, bs, b):
+                return lp(p, bs, b, jnp.float32(s.peak_lr), jnp.int32(0))
+
+            local_s = OT.timeit_fenced(
+                jax.jit(local_phase_probe),
+                state.params, state.base_state, probe_batch, iters=3)
+            step_args = ((state, guard, probe_batch, probe_key, probe_fr)
+                         if guards_on
+                         else (state, probe_batch, probe_key, probe_fr))
+            step_s = OT.timeit_fenced(jstep, *step_args, iters=3)
+            phase_totals.add("local_phase", local_s)
+            phase_totals.add("global_step", max(step_s - local_s, 0.0))
+            writer.span("local_phase", local_s, probe=True)
+            writer.span("global_step", max(step_s - local_s, 0.0), probe=True)
+        mem = OT.device_memory_stats()
+        if mem is not None:
+            writer.event("device_memory", stats=mem)
+        writer.event(
+            "finished", steps=steps_done, wall_s=wall,
+            steps_per_s=steps_done / wall if wall > 0 else None,
+            tokens=tokens,
+            tokens_per_s=tokens / wall if wall > 0 else None,
+            skipped_rounds=int(guard.skipped) if guards_on else 0,
+            rollbacks=rollbacks)
+        phase_ms = phase_totals.as_dict()
+        writer.close()
+
     history = [float(x) for x in history]
     return {
         "history": history,
         "eval_losses": evals,
         "final_eval": evals[-1][1] if evals else float("nan"),
-        "tokens": s.steps * s.tau * s.n_workers * s.b_micro * s.seq,
+        "tokens": tokens,
         "comm_rounds": int(s.steps * comm_mult),
-        "wall_s": time.time() - t0,
+        "wall_s": wall,
         "skipped_rounds": int(guard.skipped) if guards_on else 0,
         "rollbacks": rollbacks,
         "step_compiles": recompiles.count("train_step") if recompiles else None,
+        "run_dir": s.run_dir,
+        "phase_ms": phase_ms,
+        "final_metrics": last_row,
         "state": state,
     }
